@@ -1,0 +1,91 @@
+"""Benchmark driver — one section per paper table/figure + kernel wall-times.
+
+Prints ``name,us_per_call,derived`` CSV:
+  * model-derived rows (fig12a/b/c, fig13, roofline): us_per_call empty,
+    derived = model value (with the paper's claim inline);
+  * microbenchmark rows: wall-clock us/call of the core ops on this host.
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+def _timeit(fn, *args, iters: int = 5) -> float:
+    fn(*args)  # compile
+    jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def microbench() -> list[dict]:
+    from repro.core import fps as F
+    from repro.core import partition as P
+    from repro.core import query as Q
+    from repro.kernels.fps.ops import fps_tiles
+    from repro.kernels.sc_matmul.ops import sc_matmul_op
+    from repro.data.pointclouds import sample_batch
+
+    pts, _, _ = sample_batch(jax.random.PRNGKey(0), 1, 2048)
+    pts = pts[0]
+    rows = []
+    f_l2 = jax.jit(lambda p: F.fps(p, 512, metric="l2"))
+    f_l1 = jax.jit(lambda p: F.fps(p, 512, metric="l1"))
+    rows.append({"name": "micro/fps_l2_2048to512", "us": _timeit(f_l2, pts)})
+    rows.append({"name": "micro/fps_l1_2048to512", "us": _timeit(f_l1, pts)})
+    part = jax.jit(lambda p: P.median_partition(p, 3).tiles)
+    rows.append({"name": "micro/msp_partition_2048_d3", "us": _timeit(part, pts)})
+    tiles = P.median_partition(pts, 3)
+    tiled = jnp.take(pts, tiles.tiles, axis=0)
+    tiled_fps = jax.jit(lambda t: fps_tiles(t, 64, backend="xla"))
+    rows.append({"name": "micro/tiled_fps_8x256to64", "us": _timeit(tiled_fps, tiled)})
+    c = pts[:256]
+    bq = jax.jit(lambda p, c: Q.ball_query(p, c, 0.3, 32).idx)
+    lq = jax.jit(lambda p, c: Q.lattice_query(p, c, 0.3, 32).idx)
+    rows.append({"name": "micro/ball_query_256x2048", "us": _timeit(bq, pts, c)})
+    rows.append({"name": "micro/lattice_query_256x2048", "us": _timeit(lq, pts, c)})
+    xq = jax.random.randint(jax.random.PRNGKey(1), (256, 512), -32768, 32768, jnp.int32)
+    wq = jax.random.randint(jax.random.PRNGKey(2), (512, 256), -32768, 32768, jnp.int32)
+    scm = jax.jit(lambda x, w: sc_matmul_op(x, w, backend="xla"))
+    ref = jax.jit(lambda x, w: (x.astype(jnp.float32) @ w.astype(jnp.float32)))
+    rows.append({"name": "micro/sc_matmul_256x512x256_w16a16", "us": _timeit(scm, xq, wq)})
+    rows.append({"name": "micro/f32_matmul_256x512x256", "us": _timeit(ref, xq, wq)})
+    return rows
+
+
+def main() -> None:
+    import importlib
+
+    steps = 0
+    for a in sys.argv[1:]:
+        if a.startswith("--train-steps="):
+            steps = int(a.split("=")[1])
+
+    print("name,us_per_call,derived")
+    for mod_name, kwargs in [
+        ("benchmarks.fig12b_preproc_energy", {}),
+        ("benchmarks.fig12c_sccim_fom", {}),
+        ("benchmarks.fig13_system", {}),
+        ("benchmarks.fig12a_accuracy", {"steps": steps}),
+        ("benchmarks.roofline", {}),
+    ]:
+        try:
+            mod = importlib.import_module(mod_name)
+            for row in mod.run(**kwargs):
+                claim = f" (claim: {row['claim']})" if row.get("claim") else ""
+                print(f"{row['name']},,{row['value']:.6g}{claim}")
+        except Exception as e:  # noqa: BLE001
+            print(f"{mod_name},,ERROR {type(e).__name__}: {e}")
+    for row in microbench():
+        print(f"{row['name']},{row['us']:.1f},")
+
+
+if __name__ == "__main__":
+    main()

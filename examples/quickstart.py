@@ -1,0 +1,47 @@
+"""Quickstart: the paper's pipeline end-to-end in ~40 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Builds procedural point clouds, runs PC2IM preprocessing (median partition ->
+L1 FPS -> lattice query), trains a small PointNet2 classifier for a few
+steps, and prints the preprocessing-energy model numbers."""
+
+import jax
+
+from repro.configs.base import get_config
+from repro.core import energy as E
+from repro.core.preprocess import preprocess_pc2im
+from repro.data.pointclouds import sample_batch
+from repro.models import pointnet2 as PN
+from repro.optim import adamw_init, adamw_update
+
+# --- 1. data + PC2IM preprocessing -----------------------------------------
+pts, cls, seg = sample_batch(jax.random.PRNGKey(0), batch=4, n_points=512)
+res = preprocess_pc2im(pts[0], n_centroids=128, radius=0.3, nsample=16, depth=2)
+print(f"sampled {res.centroid_idx.shape[0]} centroids; "
+      f"neighbour fill-rate {float(res.neighbors.mask.mean()):.2f}")
+
+# --- 2. train a small PointNet2 under the PC2IM flow ------------------------
+cfg = get_config("pointnet2-cls", smoke=True)
+params = PN.init_params(jax.random.PRNGKey(1), cfg)
+state = adamw_init(params)
+
+
+@jax.jit
+def step(params, state, pts, labels):
+    (loss, aux), grads = jax.value_and_grad(PN.loss_fn, has_aux=True)(params, cfg, pts, labels)
+    params, state, _ = adamw_update(grads, state, params, lr=2e-3)
+    return params, state, aux
+
+
+for i in range(20):
+    pts, cls, _ = sample_batch(jax.random.PRNGKey(100 + i), 16, cfg.n_points)
+    params, state, aux = step(params, state, pts, cls)
+    if i % 5 == 0:
+        print(f"step {i}: loss={float(aux['loss']):.4f} acc={float(aux['accuracy']):.3f}")
+
+# --- 3. the paper's energy story --------------------------------------------
+const, rep = E.calibrate_cim()
+print(f"\npreprocessing energy (SemanticKITTI 16k): "
+      f"-{rep['reduction_vs_baseline1']*100:.1f}% vs baseline-1 (paper: 97.9%), "
+      f"-{rep['reduction_vs_baseline2']*100:.1f}% vs TiPU (paper: 73.4%)")

@@ -1,0 +1,14 @@
+"""End-to-end driver: train PointNet2 segmentation with checkpoint/restart.
+
+    PYTHONPATH=src python examples/train_pointcloud.py --steps 100
+
+Thin wrapper over the production driver (repro.launch.train)."""
+
+import sys
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    sys.argv = [sys.argv[0], "--arch", "pointnet2-seg", "--smoke",
+                "--ckpt-dir", "/tmp/repro_ckpt_pn2"] + sys.argv[1:]
+    main()

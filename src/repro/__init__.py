@@ -1,0 +1,13 @@
+"""repro — PC2IM (SRAM-CIM point-cloud accelerator) reproduced as a JAX/TPU framework.
+
+Layers:
+  core/       the paper's contributions (C1-C5) as composable JAX modules
+  kernels/    Pallas TPU kernels for the compute hot-spots
+  models/     model zoo (PointNet2 + 10 assigned LM-family architectures)
+  configs/    exact published configs + reduced smoke configs
+  sharding/   FSDP x TP x pod-DP partitioning policy
+  train/serve optimizer-driven train_step, prefill/decode serve steps
+  launch/     production mesh, multi-pod dry-run, drivers
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,202 @@
+"""Fault-tolerant checkpointing (no orbax offline — built native).
+
+Properties required at 1000-node scale, all implemented here:
+  * ATOMIC: write to <dir>.tmp-<uuid>, fsync, os.rename — a crash mid-save
+    never corrupts the latest checkpoint; restore scans for the newest
+    COMPLETE step directory (marker file).
+  * ASYNC: save_checkpoint(..., blocking=False) snapshots to host memory
+    and streams to disk on a background thread — the train loop resumes
+    immediately (one step of jitter, not a full serialisation stall).
+  * ELASTIC: arrays are stored UNSHARDED (gathered) with dtype/shape
+    metadata; restore re-shards onto WHATEVER mesh/sharding the new job
+    passes — a 512-chip checkpoint restores onto 256 chips (or 1 CPU) by
+    construction.  (At true 100B scale one would write per-shard files;
+    the single-file layout keeps the same interface and is what the tests
+    exercise.)
+  * Payload: msgpack + zstd (fast, no pickle, version-tagged).
+"""
+
+from __future__ import annotations
+
+import io
+import os
+import threading
+import uuid
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+import zstandard
+
+FORMAT_VERSION = 1
+_MARKER = "COMPLETE"
+
+
+def _tree_to_records(tree: Any) -> list:
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    recs = []
+    for leaf in leaves:
+        arr = np.asarray(jax.device_get(leaf))
+        if arr.dtype == jnp.bfloat16:
+            recs.append(
+                {"dtype": "bfloat16", "shape": list(arr.shape), "data": arr.view(np.uint16).tobytes()}
+            )
+        else:
+            recs.append(
+                {"dtype": arr.dtype.str, "shape": list(arr.shape), "data": arr.tobytes()}
+            )
+    return recs, treedef
+
+
+def _records_to_arrays(recs: list) -> list[np.ndarray]:
+    out = []
+    for r in recs:
+        if r["dtype"] == "bfloat16":
+            a = np.frombuffer(r["data"], np.uint16).reshape(r["shape"]).view(jnp.bfloat16)
+        else:
+            a = np.frombuffer(r["data"], np.dtype(r["dtype"])).reshape(r["shape"])
+        out.append(a)
+    return out
+
+
+def save_checkpoint(
+    directory: str,
+    step: int,
+    tree: Any,
+    *,
+    blocking: bool = True,
+    extra: dict | None = None,
+) -> threading.Thread | None:
+    """Save `tree` at `step` under directory/step_<N>/ atomically."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    host_leaves = [np.asarray(jax.device_get(x)) for x in leaves]  # snapshot NOW
+
+    def _write():
+        recs = []
+        for arr in host_leaves:
+            if arr.dtype == jnp.bfloat16:
+                recs.append({"dtype": "bfloat16", "shape": list(arr.shape),
+                             "data": arr.view(np.uint16).tobytes()})
+            else:
+                recs.append({"dtype": arr.dtype.str, "shape": list(arr.shape),
+                             "data": arr.tobytes()})
+        payload = msgpack.packb(
+            {"version": FORMAT_VERSION, "step": step, "extra": extra or {}, "leaves": recs},
+            use_bin_type=True,
+        )
+        comp = zstandard.ZstdCompressor(level=3).compress(payload)
+        final = os.path.join(directory, f"step_{step:012d}")
+        tmp = final + f".tmp-{uuid.uuid4().hex[:8]}"
+        os.makedirs(tmp, exist_ok=True)
+        with open(os.path.join(tmp, "data.msgpack.zst"), "wb") as f:
+            f.write(comp)
+            f.flush()
+            os.fsync(f.fileno())
+        with open(os.path.join(tmp, _MARKER), "w") as f:
+            f.write(str(step))
+            f.flush()
+            os.fsync(f.fileno())
+        if os.path.exists(final):
+            return  # concurrent save of the same step
+        os.rename(tmp, final)
+
+    if blocking:
+        _write()
+        return None
+    t = threading.Thread(target=_write, daemon=True)
+    t.start()
+    return t
+
+
+def latest_step(directory: str) -> int | None:
+    if not os.path.isdir(directory):
+        return None
+    steps = []
+    for name in os.listdir(directory):
+        if name.startswith("step_") and ".tmp" not in name:
+            if os.path.exists(os.path.join(directory, name, _MARKER)):
+                steps.append(int(name.split("_")[1]))
+    return max(steps) if steps else None
+
+
+def load_checkpoint(
+    directory: str,
+    tree_like: Any,
+    *,
+    step: int | None = None,
+    shardings: Any | None = None,
+):
+    """Restore into the structure of `tree_like`; reshard onto `shardings`
+    (a pytree of NamedSharding/None) for elastic restore.  Returns
+    (tree, step, extra)."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no complete checkpoint under {directory}")
+    path = os.path.join(directory, f"step_{step:012d}", "data.msgpack.zst")
+    with open(path, "rb") as f:
+        payload = zstandard.ZstdDecompressor().decompress(f.read())
+    obj = msgpack.unpackb(payload, raw=False)
+    assert obj["version"] == FORMAT_VERSION
+    arrays = _records_to_arrays(obj["leaves"])
+    leaves_like, treedef = jax.tree_util.tree_flatten(tree_like)
+    assert len(arrays) == len(leaves_like), (
+        f"checkpoint has {len(arrays)} leaves, expected {len(leaves_like)}"
+    )
+    if shardings is not None:
+        shard_leaves = jax.tree_util.tree_flatten(shardings)[0]
+    else:
+        shard_leaves = [None] * len(arrays)
+    out = []
+    for arr, like, sh in zip(arrays, leaves_like, shard_leaves):
+        a = jnp.asarray(arr)
+        if sh is not None:
+            a = jax.device_put(a, sh)
+        out.append(a)
+    return jax.tree_util.tree_unflatten(treedef, out), obj["step"], obj["extra"]
+
+
+class CheckpointManager:
+    """Keeps the last `keep` checkpoints; async saves; restart-aware."""
+
+    def __init__(self, directory: str, *, keep: int = 3, every: int = 100):
+        self.directory = directory
+        self.keep = keep
+        self.every = every
+        self._pending: threading.Thread | None = None
+        os.makedirs(directory, exist_ok=True)
+
+    def maybe_save(self, step: int, tree: Any, *, force: bool = False, extra=None):
+        if not force and (self.every <= 0 or step % self.every != 0):
+            return False
+        self.wait()
+        self._pending = save_checkpoint(
+            self.directory, step, tree, blocking=False, extra=extra
+        )
+        self._gc()
+        return True
+
+    def wait(self):
+        if self._pending is not None:
+            self._pending.join()
+            self._pending = None
+
+    def restore_or_none(self, tree_like, *, shardings=None):
+        step = latest_step(self.directory)
+        if step is None:
+            return None
+        return load_checkpoint(self.directory, tree_like, step=step, shardings=shardings)
+
+    def _gc(self):
+        steps = sorted(
+            int(n.split("_")[1])
+            for n in os.listdir(self.directory)
+            if n.startswith("step_") and ".tmp" not in n
+            and os.path.exists(os.path.join(self.directory, n, _MARKER))
+        )
+        import shutil
+
+        for s in steps[: -self.keep] if self.keep > 0 else []:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:012d}"), ignore_errors=True)

@@ -1,0 +1,1 @@
+from repro.configs.base import ARCH_REGISTRY, ModelConfig, get_config, register  # noqa: F401

@@ -1,0 +1,10 @@
+"""Core PC2IM algorithms (paper contributions C1-C5).
+
+C1  approximate-distance sampling (L1 FPS) + lattice query   -> fps.py, query.py
+C2  median-based spatial partitioning (MSP)                  -> partition.py
+C3  Ping-Pong-MAX fused distance-update/argmax dataflow      -> fps.py (fused step), kernels/fps
+C4  split-concatenate W16A16 quantized MAC                   -> quant.py, kernels/sc_matmul
+C5  delayed aggregation                                      -> grouping.py
+Energy/cycle models for the paper's evaluation figures       -> energy.py
+End-to-end preprocessing pipelines (baseline1/2, pc2im)      -> preprocess.py
+"""

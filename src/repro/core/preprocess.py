@@ -1,0 +1,132 @@
+"""End-to-end data-preprocessing pipelines: baseline-1, baseline-2 (TiPU-like), PC2IM.
+
+All three produce the same interface — sampled centroids + neighbour sets —
+so the PointNet2 model can swap them (`preproc="pc2im"` etc.):
+
+  baseline1 : global exact-L2 FPS over the full cloud + global ball query.
+  baseline2 : fixed-shape spatial grid tiles (padded, ragged occupancy) +
+              local exact-L2 FPS + local ball query.            [TiPU 10]
+  pc2im     : median partition (equal tiles) + local *L1* FPS +
+              local lattice query (L = 1.6R).                   [this paper]
+
+Everything is shape-static and jit/vmap-friendly; tiles vectorise with zero
+padding for pc2im (the MSP property) and with `valid` masks for baseline2.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fps as fps_mod
+from repro.core import partition as part_mod
+from repro.core import query as query_mod
+from repro.core.query import NeighborSet
+
+
+class PreprocessResult(NamedTuple):
+    centroid_idx: jax.Array  # (M,) global indices into the input cloud
+    centroid_xyz: jax.Array  # (M, 3)
+    neighbors: NeighborSet  # idx (M, nsample) global; mask (M, nsample)
+    centroid_valid: jax.Array  # (M,) False for centroids from padded tile slots
+
+
+def preprocess_baseline1(
+    points: jax.Array, n_centroids: int, radius: float, nsample: int
+) -> PreprocessResult:
+    """Global L2 FPS + global ball query (the costly canonical flow)."""
+    cidx = fps_mod.fps(points, n_centroids, metric="l2")
+    cxyz = jnp.take(points, cidx, axis=0)
+    nbrs = query_mod.ball_query(points, cxyz, radius, nsample)
+    return PreprocessResult(cidx, cxyz, nbrs, jnp.ones((n_centroids,), bool))
+
+
+def _tiled_common(
+    points: jax.Array,
+    part: part_mod.Partition,
+    n_centroids: int,
+    radius: float,
+    nsample: int,
+    metric: str,
+    query: str,
+) -> PreprocessResult:
+    """Shared tiled flow: local FPS per tile + local neighbour query per tile."""
+    t, p = part.tiles.shape
+    if n_centroids % t != 0:
+        raise ValueError(f"n_centroids={n_centroids} not divisible by n_tiles={t}")
+    k_per_tile = n_centroids // t
+
+    coords = part_mod.partition_coords(points, part)  # (T, P, 3)
+
+    # Local FPS (vmapped over tiles).  Padded slots (valid=False) are never
+    # sampled: they are masked out of the argmax.
+    local_c = jax.vmap(
+        lambda c, v: fps_mod.fps(c, k_per_tile, metric=metric, valid=v)
+    )(coords, part.valid)  # (T, k)
+    cidx = jnp.take_along_axis(part.tiles, local_c, axis=1)  # global (T, k)
+    cxyz = jnp.take(points, cidx, axis=0)  # (T, k, 3)
+    # a centroid is real iff its tile slot was real
+    cvalid = jnp.take_along_axis(part.valid, local_c, axis=1)  # (T, k)
+
+    qfn = query_mod.lattice_query if query == "lattice" else query_mod.ball_query
+
+    def tile_query(tile_coords, tile_cxyz, tile_valid):
+        return qfn(tile_coords, tile_cxyz, radius, nsample, valid=tile_valid)
+
+    nbrs_local = jax.vmap(tile_query)(coords, cxyz, part.valid)  # idx (T,k,S) local
+    # map local neighbour slots back to global point indices
+    nidx_global = jnp.take_along_axis(
+        part.tiles[:, None, :].repeat(k_per_tile, axis=1).reshape(t * k_per_tile, p),
+        nbrs_local.idx.reshape(t * k_per_tile, nsample),
+        axis=1,
+    )
+    m = t * k_per_tile
+    return PreprocessResult(
+        centroid_idx=cidx.reshape(m),
+        centroid_xyz=cxyz.reshape(m, 3),
+        neighbors=NeighborSet(
+            idx=nidx_global.reshape(m, nsample),
+            mask=nbrs_local.mask.reshape(m, nsample) & cvalid.reshape(m)[:, None],
+        ),
+        centroid_valid=cvalid.reshape(m),
+    )
+
+
+def preprocess_baseline2(
+    points: jax.Array,
+    n_centroids: int,
+    radius: float,
+    nsample: int,
+    *,
+    grid: int = 2,
+    capacity: int | None = None,
+) -> PreprocessResult:
+    """TiPU-like: fixed spatial grid tiles (ragged -> padded) + local L2 FPS + ball query."""
+    n = points.shape[0]
+    if capacity is None:
+        capacity = max(n // (grid**3) * 2, 32)  # 2x mean occupancy, TiPU-style
+    part = part_mod.grid_partition(points, grid, capacity)
+    return _tiled_common(points, part, n_centroids, radius, nsample, "l2", "ball")
+
+
+def preprocess_pc2im(
+    points: jax.Array,
+    n_centroids: int,
+    radius: float,
+    nsample: int,
+    *,
+    depth: int = 3,
+    axis_mode: str = "widest",
+) -> PreprocessResult:
+    """PC2IM: MSP equal tiles + local L1 FPS + local lattice query (C1+C2+C3)."""
+    part = part_mod.median_partition(points, depth, axis_mode=axis_mode)
+    return _tiled_common(points, part, n_centroids, radius, nsample, "l1", "lattice")
+
+
+PIPELINES = {
+    "baseline1": preprocess_baseline1,
+    "baseline2": preprocess_baseline2,
+    "pc2im": preprocess_pc2im,
+}

@@ -1,0 +1,153 @@
+"""Split-concatenate quantized MACs (paper C4 — SC-CIM), as exact integer math.
+
+The paper computes 16b x 16b MACs by splitting weights into 4-bit *blocks*
+(consecutive nibbles) and inputs into 4-bit *clusters* (nibble-interleaved),
+then forming cluster-block products by concatenation/shift-add and merging
+partial sums in a fused dense/sparse adder tree.
+
+Arithmetic identity (two's-complement nibble decomposition):
+
+    q = n0 + 16*n1 + 256*n2 + 4096*n3s,   n0..n2 in [0,15], n3s in [-8,7]
+
+    x @ w = sum_{i,j} (X_i @ W_j) << 4*(i+j)
+
+Each plane-pair dot is a small-integer matmul — on TPU it rides the int8 MXU
+path (exact int32 accumulation, 4x bf16 byte-throughput); the (i+j) diagonal
+grouping of the shift-accumulate is the software image of the paper's fused
+adder.  kernels/sc_matmul implements the Pallas version; this module is the
+oracle + the pure-XLA production path.
+
+Accumulation widths (documented, asserted in tests):
+  plane-pair dot:  |sum| <= 15*15*K  -> int32 exact for K <= 9.5M
+  final combine:   needs up to 32 + 2*bits-8 bits -> int64 (exact mode) or
+                   f64/f32 (fast mode; f32 relerr ~2^-24, fine after dequant)
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+PLANE_BITS = 4
+N_PLANES_16 = 4  # 16-bit operands -> 4 nibbles
+
+
+class Quantized(NamedTuple):
+    q: jax.Array  # int32-held integer values
+    scale: jax.Array  # per-tensor (or per-channel) float scale
+
+
+def quantize_symmetric(x: jax.Array, bits: int = 16, axis=None) -> Quantized:
+    """Symmetric signed quantization: q = round(x / s), s = max|x| / (2^(b-1)-1)."""
+    qmax = (1 << (bits - 1)) - 1
+    if axis is None:
+        amax = jnp.max(jnp.abs(x))
+    else:
+        amax = jnp.max(jnp.abs(x), axis=axis, keepdims=True)
+    scale = jnp.maximum(amax, 1e-12) / qmax
+    q = jnp.clip(jnp.round(x / scale), -qmax - 1, qmax).astype(jnp.int32)
+    return Quantized(q=q, scale=scale)
+
+
+def dequantize(t: Quantized) -> jax.Array:
+    return t.q.astype(jnp.float32) * t.scale
+
+
+def split_planes(q: jax.Array, n_planes: int = N_PLANES_16) -> jax.Array:
+    """Nibble-decompose signed ints: (..., ) int32 -> (n_planes, ...) int32.
+
+    Planes 0..n-2 are unsigned nibbles in [0,15]; the top plane is the
+    arithmetic-shift remainder in [-8,7] (two's-complement sign handling —
+    the paper's 'separately concatenate signed and unsigned parts').
+    """
+    q = q.astype(jnp.int32)
+    planes = []
+    for i in range(n_planes - 1):
+        planes.append((q >> (PLANE_BITS * i)) & 0xF)
+    planes.append(q >> (PLANE_BITS * (n_planes - 1)))  # arithmetic shift: signed top
+    return jnp.stack(planes, axis=0)
+
+
+def combine_planes(planes: jax.Array) -> jax.Array:
+    """Inverse of split_planes (sanity/tests)."""
+    n = planes.shape[0]
+    out = jnp.zeros_like(planes[0])
+    for i in range(n):
+        out = out + (planes[i] << (PLANE_BITS * i))
+    return out
+
+
+def sc_matmul(
+    x_q: jax.Array,
+    w_q: jax.Array,
+    *,
+    n_planes: int = N_PLANES_16,
+    combine: str = "int64",
+) -> jax.Array:
+    """Split-concatenate integer matmul: exact x_q @ w_q via 4-bit planes.
+
+    x_q: (M, K) int32 (16-bit range), w_q: (K, N) int32 -> (M, N).
+
+    combine="int64": exact (test oracle / CPU).
+    combine="f32"  : TPU-fast shift-merge in float32 (bounded rounding error,
+                     irrelevant after dequantization to bf16 activations).
+    """
+    xp = split_planes(x_q, n_planes)  # (P, M, K) int32, small magnitude
+    wp = split_planes(w_q, n_planes)  # (P, K, N)
+
+    # Group plane-pairs by diagonal d = i + j (the fused-adder schedule):
+    # all pairs on a diagonal share one shift -> sum them *before* shifting.
+    diag_dots: dict[int, jax.Array] = {}
+    for i in range(n_planes):
+        for j in range(n_planes):
+            # int8-range operands, int32 accumulation — the MXU int path.
+            dot = jax.lax.dot_general(
+                xp[i],
+                wp[j],
+                (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.int32,
+            )
+            d = i + j
+            diag_dots[d] = dot if d not in diag_dots else diag_dots[d] + dot
+
+    if combine == "int64":
+        out = jnp.zeros(diag_dots[0].shape, jnp.int64)
+        for d, dot in diag_dots.items():
+            out = out + (dot.astype(jnp.int64) << (PLANE_BITS * d))
+        return out
+    elif combine == "f32":
+        out = jnp.zeros(diag_dots[0].shape, jnp.float32)
+        for d, dot in diag_dots.items():
+            out = out + dot.astype(jnp.float32) * float(1 << (PLANE_BITS * d))
+        return out
+    raise ValueError(f"unknown combine mode {combine!r}")
+
+
+def quantized_linear(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    bits: int = 16,
+    combine: str = "f32",
+) -> jax.Array:
+    """W16A16 linear layer via SC decomposition: quantize -> sc_matmul -> dequant.
+
+    x: (..., K) float, w: (K, N) float -> (..., N) float32.  This is the
+    `quant_mode="sc_w16a16"` path usable by any architecture's MLP.
+    """
+    n_planes = bits // PLANE_BITS
+    lead = x.shape[:-1]
+    xq = quantize_symmetric(x.reshape(-1, x.shape[-1]), bits)
+    wq = quantize_symmetric(w, bits)
+    y = sc_matmul(xq.q, wq.q, n_planes=n_planes, combine=combine)
+    y = y.astype(jnp.float32) * (xq.scale * wq.scale)
+    return y.reshape(lead + (w.shape[-1],))
+
+
+def ptq_error(x: jax.Array, bits: int = 16) -> jax.Array:
+    """Relative RMS round-trip error of symmetric PTQ (Fig 12a's <0.3% claim)."""
+    t = quantize_symmetric(x, bits)
+    err = dequantize(t) - x
+    return jnp.sqrt(jnp.mean(err**2)) / jnp.maximum(jnp.sqrt(jnp.mean(x**2)), 1e-12)

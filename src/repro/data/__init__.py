@@ -1,0 +1,6 @@
+"""Deterministic, seeded synthetic data pipelines.
+
+pointclouds.py  procedural 3D shapes (cls + per-point seg labels) — stands in
+                for ModelNet/S3DIS/SemanticKITTI (unavailable offline).
+tokens.py       synthetic LM token streams, host-sharded, prefetched.
+"""

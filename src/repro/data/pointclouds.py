@@ -1,0 +1,104 @@
+"""Procedural 3D shape dataset — seeded, deterministic, fully-on-device.
+
+8 classes with distinct geometry: sphere, cube(surface), cylinder, cone,
+torus, plane, helix, cross.  Each sample is randomly rotated, scaled and
+jittered, so classification requires real shape features.  Per-point
+segmentation labels = octant of the point in the shape's CANONICAL frame
+(the net must undo the rotation from geometry alone).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+N_CLASSES = 8
+N_SEG_CLASSES = 8  # canonical octants
+
+
+def _unit(x, axis=-1, eps=1e-9):
+    return x / (jnp.linalg.norm(x, axis=axis, keepdims=True) + eps)
+
+
+def _make_shape(cls_id: int, key, n: int) -> jax.Array:
+    """Canonical-frame points for one shape class.  (N, 3) in [-1, 1]^3-ish."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    u = jax.random.uniform(k1, (n, 3), minval=-1.0, maxval=1.0)
+    t = jax.random.uniform(k2, (n,), minval=0.0, maxval=1.0)
+
+    sphere = _unit(jax.random.normal(k3, (n, 3)))
+    # cube surface: project onto the largest |coord| face
+    m = jnp.argmax(jnp.abs(u), axis=1)
+    cube = u.at[jnp.arange(n), m].set(jnp.sign(u[jnp.arange(n), m]))
+    theta = 2 * jnp.pi * t
+    cylinder = jnp.stack([jnp.cos(theta), jnp.sin(theta), u[:, 2]], axis=1)
+    r_cone = 1.0 - t
+    cone = jnp.stack([r_cone * jnp.cos(theta), r_cone * jnp.sin(theta), 2 * t - 1], axis=1)
+    phi = 2 * jnp.pi * u[:, 0]
+    torus = jnp.stack(
+        [
+            (0.7 + 0.3 * jnp.cos(phi)) * jnp.cos(theta),
+            (0.7 + 0.3 * jnp.cos(phi)) * jnp.sin(theta),
+            0.3 * jnp.sin(phi),
+        ],
+        axis=1,
+    )
+    plane = jnp.stack([u[:, 0], u[:, 1], 0.05 * u[:, 2]], axis=1)
+    hz = 2 * t - 1
+    helix = jnp.stack([jnp.cos(3 * jnp.pi * hz), jnp.sin(3 * jnp.pi * hz), hz], axis=1)
+    helix = helix + 0.05 * u  # thickness
+    # cross: two orthogonal bars
+    bar = jnp.stack([u[:, 0], 0.15 * u[:, 1], 0.15 * u[:, 2]], axis=1)
+    swap = (u[:, 2] > 0)[:, None]
+    cross = jnp.where(swap, bar[:, [1, 0, 2]], bar)
+
+    shapes = jnp.stack([sphere, cube, cylinder, cone, torus, plane, helix, cross])
+    return shapes[cls_id]
+
+
+def _random_rotation(key) -> jax.Array:
+    """Uniform random rotation matrix (QR of a Gaussian, det fixed to +1)."""
+    a = jax.random.normal(key, (3, 3))
+    q, r = jnp.linalg.qr(a)
+    q = q * jnp.sign(jnp.diagonal(r))[None, :]
+    det = jnp.linalg.det(q)
+    return q.at[:, 0].multiply(jnp.sign(det))
+
+
+@functools.partial(jax.jit, static_argnames=("n_points", "batch"))
+def sample_batch(key, batch: int, n_points: int = 1024):
+    """Returns (points (B, N, 3) f32, cls_labels (B,), seg_labels (B, N))."""
+    keys = jax.random.split(key, batch)
+
+    def one(k):
+        kc, ks, kr, kj, kscale = jax.random.split(k, 5)
+        cls_id = jax.random.randint(kc, (), 0, N_CLASSES)
+        branches = [
+            functools.partial(lambda c, k: _make_shape(c, k, n_points), c)
+            for c in range(N_CLASSES)
+        ]
+        canon = jax.lax.switch(cls_id, branches, ks)
+        seg = (
+            (canon[:, 0] > 0).astype(jnp.int32) * 4
+            + (canon[:, 1] > 0).astype(jnp.int32) * 2
+            + (canon[:, 2] > 0).astype(jnp.int32)
+        )
+        rot = _random_rotation(kr)
+        scale = jax.random.uniform(kscale, (), minval=0.7, maxval=1.3)
+        pts = (canon * scale) @ rot.T
+        pts = pts + 0.02 * jax.random.normal(kj, pts.shape)
+        return pts.astype(jnp.float32), cls_id, seg
+
+    return jax.vmap(one)(keys)
+
+
+def data_stream(seed: int, batch: int, n_points: int = 1024, *, shard_id: int = 0, n_shards: int = 1):
+    """Infinite deterministic host-shardable stream (fault-tolerant restart:
+    step -> key is pure, so resuming at step S reproduces the exact batch)."""
+    step = 0
+    while True:
+        key = jax.random.fold_in(jax.random.fold_in(jax.random.PRNGKey(seed), step), shard_id * 7919)
+        yield sample_batch(key, batch, n_points)
+        step += n_shards

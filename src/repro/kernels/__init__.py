@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for PC2IM's compute hot-spots.
+
+fps/        in-VMEM farthest-point-sampling loop — the APD-CIM + Ping-Pong-MAX
+            CAM analogue: the point tile and the temporary-distance vector
+            stay in VMEM for the entire K-step loop (C1+C3).
+sc_matmul/  split-concatenate W16A16 integer matmul via 4-bit planes on the
+            int8 MXU path (C4).
+knn3/       fused 3-nearest-neighbour (3x min-extract) for FP layers.
+lattice/    fused L1-distance + box-mask + first-k neighbour select (C1).
+
+Each kernel: kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd public
+wrapper with interpret switch), ref.py (pure-jnp oracle).  All validated in
+interpret mode on CPU; BlockSpecs are sized for TPU v5e VMEM (16 MB less
+double-buffering headroom) with lane-dim multiples of 128.
+"""

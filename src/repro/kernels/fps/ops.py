@@ -1,0 +1,50 @@
+"""Public op: tiled FPS with kernel/XLA backend selection.
+
+`fps_tiles(points_tiled, k)` accepts MSP-layout tiles (T, P, 3) (the
+natural output of core.partition) and handles the TPU-native (T, 3, P)
+transposition + lane padding internally.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.fps.kernel import fps_tiles_pallas
+from repro.kernels.fps.ref import fps_tiles_ref
+
+
+def fps_tiles(
+    points_tiled: jax.Array,
+    k: int,
+    *,
+    metric: str = "l1",
+    backend: str = "auto",
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Batched per-tile FPS.  points_tiled: (T, P, 3) -> (T, k) local indices.
+
+    backend: "pallas" (TPU kernel; interpret on CPU), "xla" (reference path),
+    "auto" (pallas on TPU, xla elsewhere).
+    """
+    t, p, three = points_tiled.shape
+    assert three == 3
+    if backend == "auto":
+        backend = "pallas" if jax.default_backend() == "tpu" else "xla"
+
+    if backend == "xla":
+        return fps_tiles_ref(points_tiled.transpose(0, 2, 1), k, metric=metric)
+
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    pts = points_tiled.transpose(0, 2, 1)  # (T, 3, P)
+    pad = (-p) % 128
+    if pad:
+        # pad with copies of the first point: dmin stays 0 there after step 1;
+        # duplicates are never selected before any real point
+        filler = jnp.broadcast_to(pts[:, :, :1], (t, 3, pad))
+        pts = jnp.concatenate([pts, filler], axis=-1)
+    idx = fps_tiles_pallas(pts.astype(jnp.float32), k, metric=metric, interpret=interpret)
+    if pad:
+        idx = jnp.minimum(idx, p - 1)  # paranoia: padded lanes can't win, but clamp
+    return idx

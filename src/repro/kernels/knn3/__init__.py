@@ -1,0 +1,1 @@
+from repro.kernels.knn3.ops import knn3  # noqa: F401

@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for knn3 — reuses core.query.knn (tested vs numpy argsort)."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.core.query import knn
+
+
+def knn3_ref(queries: jax.Array, points_t: jax.Array, *, k: int = 3, metric: str = "l2"):
+    """queries: (Q, 3), points_t: (3, P) -> (idx, dist) matching the kernel."""
+    return knn(queries, points_t.T, k, metric=metric)

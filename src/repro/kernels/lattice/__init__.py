@@ -1,0 +1,1 @@
+from repro.kernels.lattice.ops import lattice_query_fused  # noqa: F401

@@ -1,0 +1,51 @@
+"""Public op: fused lattice query with backend selection."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.query import LATTICE_RANGE_FACTOR, NeighborSet
+from repro.kernels.lattice.kernel import lattice_pallas
+from repro.kernels.lattice.ref import lattice_ref
+
+
+def lattice_query_fused(
+    points: jax.Array,
+    centroids: jax.Array,
+    radius: float,
+    nsample: int,
+    *,
+    range_factor: float = LATTICE_RANGE_FACTOR,
+    backend: str = "auto",
+    interpret: bool | None = None,
+) -> NeighborSet:
+    """Drop-in fused version of core.query.lattice_query (same signature order)."""
+    l_range = float(radius * range_factor)
+    if backend == "auto":
+        backend = "pallas" if jax.default_backend() == "tpu" else "xla"
+    pts_t = points.T
+    if backend == "xla":
+        idx, mask = lattice_ref(centroids, pts_t, nsample=nsample, l_range=l_range)
+        return NeighborSet(idx=idx, mask=mask)
+
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    m, p = centroids.shape[0], points.shape[0]
+    pad_p = (-p) % 128
+    if pad_p:
+        filler = pts_t[:, :1] + 1e15  # finite, out of any lattice range
+        pts_t = jnp.concatenate([pts_t, jnp.broadcast_to(filler, (3, pad_p))], axis=1)
+    bc = 128 if m % 128 == 0 else (m if m <= 128 else None)
+    pad_m = 0
+    if bc is None:
+        bc = 128
+        pad_m = (-m) % bc
+        centroids = jnp.concatenate(
+            [centroids, jnp.broadcast_to(centroids[:1] + 1e15, (pad_m, 3))], axis=0
+        )
+    idx, mask = lattice_pallas(
+        centroids.astype(jnp.float32), pts_t.astype(jnp.float32),
+        nsample=nsample, l_range=l_range, bc=bc, interpret=interpret,
+    )
+    return NeighborSet(idx=idx[:m], mask=mask[:m])

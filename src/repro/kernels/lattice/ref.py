@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the fused lattice query — core.query.lattice_query
+(itself tested against ball-query coverage properties)."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.core.query import lattice_query
+
+
+def lattice_ref(centroids: jax.Array, points_t: jax.Array, *, nsample: int, l_range: float):
+    res = lattice_query(
+        points_t.T, centroids, radius=l_range, nsample=nsample, range_factor=1.0
+    )
+    return res.idx, res.mask

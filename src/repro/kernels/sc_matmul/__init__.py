@@ -1,0 +1,1 @@
+from repro.kernels.sc_matmul.ops import sc_matmul_op, sc_quantized_linear  # noqa: F401

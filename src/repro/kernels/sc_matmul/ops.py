@@ -1,0 +1,53 @@
+"""Public ops: SC integer matmul + the drop-in quantized linear layer.
+
+`sc_quantized_linear` is the `quant_mode="sc_w16a16"` path exposed to every
+architecture's MLP/projection layers (DESIGN §Arch-applicability): float in,
+float out, SC-CIM integer GEMM inside.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import quantize_symmetric
+from repro.kernels.sc_matmul.kernel import sc_matmul_pallas
+from repro.kernels.sc_matmul.ref import sc_matmul_ref
+
+
+def sc_matmul_op(
+    x_q: jax.Array,
+    w_q: jax.Array,
+    *,
+    bits: int = 16,
+    backend: str = "auto",
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Exact integer matmul via SC planes.  (M,K) x (K,N) int32 -> (M,N) f32."""
+    n_planes = bits // 4
+    if backend == "auto":
+        backend = "pallas" if jax.default_backend() == "tpu" else "xla"
+    if backend == "xla":
+        return sc_matmul_ref(x_q, w_q, n_planes=n_planes)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return sc_matmul_pallas(
+        x_q, w_q, n_planes_x=n_planes, n_planes_w=n_planes, interpret=interpret
+    )
+
+
+def sc_quantized_linear(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    bits: int = 16,
+    backend: str = "auto",
+    interpret: bool | None = None,
+) -> jax.Array:
+    """W16A16 linear: float (..., K) x (K, N) -> float32 (..., N)."""
+    lead = x.shape[:-1]
+    xq = quantize_symmetric(x.reshape(-1, x.shape[-1]), bits)
+    wq = quantize_symmetric(w, bits)
+    y = sc_matmul_op(xq.q, wq.q, bits=bits, backend=backend, interpret=interpret)
+    y = y * (xq.scale * wq.scale)
+    return y.reshape(lead + (w.shape[-1],)).astype(jnp.float32)

@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the SC matmul kernel (reuses core.quant — itself
+property-tested against int64 numpy)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import sc_matmul
+
+
+def sc_matmul_ref(
+    x_q: jax.Array, w_q: jax.Array, *, n_planes: int = 4
+) -> jax.Array:
+    """f32-combine reference — identical arithmetic schedule to the kernel."""
+    return sc_matmul(x_q, w_q, n_planes=n_planes, combine="f32")
+
+
+def int_matmul_ref(x_q: jax.Array, w_q: jax.Array) -> jax.Array:
+    """Plain integer matmul in f64-exact numpy semantics (via f32 when safe)."""
+    return jnp.asarray(x_q, jnp.float32) @ jnp.asarray(w_q, jnp.float32)

@@ -1,0 +1,26 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS (not module-level constants) so importing this module
+never touches jax device state — required for the dry-run's
+xla_force_host_platform_device_count trick and for tests that must see the
+single real CPU device.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single pod (256 chips, v5e) or 2x16x16 two-pod (512 chips).
+
+    Axes: 'pod' (DP across pods, DCN), 'data' (FSDP/batch, ICI),
+    'model' (TP/EP, ICI)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Degenerate 1x1 mesh on the real local device (tests/examples)."""
+    return jax.make_mesh((1, 1), ("data", "model"))

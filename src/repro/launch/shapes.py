@@ -1,0 +1,152 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every (arch x shape) cell.
+
+No device allocation — these feed jax.jit(...).lower() directly.  Shapes per
+the assignment:
+
+    train_4k     seq_len=4096    global_batch=256   (training step)
+    prefill_32k  seq_len=32768   global_batch=32    (inference prefill)
+    decode_32k   seq_len=32768   global_batch=128   (one token + 32k cache)
+    long_500k    seq_len=524288  global_batch=1     (long-context decode)
+
+long_500k applies only to sub-quadratic archs (mamba2, recurrentgemma,
+gemma3); pure full-attention archs are skipped with a recorded reason
+(DESIGN.md §Arch-applicability).  [audio]/[vlm] frontends are stubs: the
+batch carries precomputed frame/patch embeddings.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+SDS = jax.ShapeDtypeStruct
+
+SHAPES = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1),
+}
+
+# archs allowed to run long_500k (sub-quadratic / bounded-window decode)
+LONG_OK = {"mamba2-1.3b", "recurrentgemma-2b", "gemma3-12b"}
+
+
+def skip_reason(arch: str, shape: str) -> str | None:
+    if shape == "long_500k" and arch not in LONG_OK:
+        return "full-attention arch: long_500k skipped per assignment rule"
+    return None
+
+
+def token_batch_specs(cfg: ModelConfig, batch: int, seq: int, *, labels: bool = True):
+    d = {"tokens": SDS((batch, seq), jnp.int32)}
+    if labels:
+        d["labels"] = SDS((batch, seq), jnp.int32)
+    return d
+
+
+def input_specs(cfg: ModelConfig, shape_name: str) -> dict:
+    """Abstract batch for train_loss / prefill.  Decode state specs come from
+    decode_state_specs()."""
+    info = SHAPES[shape_name]
+    b, s = info["batch"], info["seq"]
+    kind = info["kind"]
+    if kind == "decode":
+        return {"token": SDS((b, 1), jnp.int32)}
+
+    if cfg.family == "encdec":
+        d = token_batch_specs(cfg, b, s, labels=(kind == "train"))
+        d["enc_embeds"] = SDS((b, s, cfg.d_model), cfg.dtype)
+        return d
+    if cfg.family == "vlm":
+        s_text = s - cfg.n_patches
+        d = {"tokens": SDS((b, s_text), jnp.int32)}
+        if kind == "train":
+            d["labels"] = SDS((b, s_text), jnp.int32)
+        d["patch_embeds"] = SDS((b, cfg.n_patches, cfg.d_model), cfg.dtype)
+        return d
+    return token_batch_specs(cfg, b, s, labels=(kind == "train"))
+
+
+def decode_state_specs(cfg: ModelConfig, shape_name: str):
+    """Abstract decode state via eval_shape over the family's initializer."""
+    from repro.models.families import get_family_api
+
+    info = SHAPES[shape_name]
+    b, s = info["batch"], info["seq"]
+    api = get_family_api(cfg)
+
+    def mk():
+        return api["init_decode_state"](cfg, b, s)
+
+    return jax.eval_shape(mk)
+
+
+def abstract_params(cfg: ModelConfig):
+    from repro.models.families import get_family_api
+
+    api = get_family_api(cfg)
+    return jax.eval_shape(lambda: api["init"](jax.random.PRNGKey(0), cfg))
+
+
+def abstract_opt_state(params_shape):
+    from repro.optim.adamw import adamw_init
+
+    return jax.eval_shape(lambda: adamw_init_from_shapes(params_shape))
+
+
+def adamw_init_from_shapes(params_shape):
+    from repro.optim.adamw import adamw_init
+
+    params = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), params_shape)
+    return adamw_init(params)
+
+
+def model_flops(cfg: ModelConfig, shape_name: str) -> float:
+    """MODEL_FLOPS: 6*N*D for train (N = params excl. embeddings read-only
+    share; we use total non-embedding params + lm_head), 2*N per generated
+    token for decode, 2*N*D for prefill; attention flops added explicitly."""
+    info = SHAPES[shape_name]
+    b, s = info["batch"], info["seq"]
+    n = cfg.param_count()
+    emb = cfg.vocab_size * cfg.d_model * (1 if cfg.tie_embeddings else 2)
+    n_active = n - emb
+    if cfg.family == "moe":
+        # active experts only
+        dense_share = cfg.n_experts and (cfg.top_k / cfg.n_experts)
+        moe_params = 3 * cfg.d_model * cfg.d_ff * cfg.n_experts * cfg.n_layers
+        n_active = n_active - moe_params + moe_params * dense_share
+    # attention context flops per token ~ 2*2*Hq*dh*ctx (qk + pv)
+    pat = cfg.pattern_for_layers()
+    heads_flops = 0.0
+    for t in pat:
+        if t == "recurrent":
+            continue
+        ctx = s if t == "global" else min(s, cfg.window or s)
+        if info["kind"] == "train" or info["kind"] == "prefill":
+            ctx_eff = ctx / 2 if t == "global" else ctx  # causal average
+            heads_flops += 4 * cfg.n_heads * cfg.head_dim * ctx_eff
+        else:
+            heads_flops += 4 * cfg.n_heads * cfg.head_dim * ctx
+    # encoder attention context (whisper): params already in n_active, but the
+    # non-causal full-context score/value flops are not in `heads_flops`
+    # (which walks the decoder pattern); cross-attention adds another S ctx.
+    enc_flops_per_token = 0.0
+    if cfg.encoder_layers:
+        hh, dh = cfg.n_heads, cfg.head_dim
+        enc_flops_per_token = cfg.encoder_layers * 4 * hh * dh * s  # self (full)
+        enc_flops_per_token += cfg.n_layers * 4 * hh * dh * s  # decoder cross
+    # lm head
+    head = 2 * cfg.d_model * cfg.vocab_size
+    if info["kind"] == "train":
+        per_token = 6 * n_active + 3 * heads_flops + 3 * head + 3 * enc_flops_per_token
+        return b * s * per_token
+    if info["kind"] == "prefill":
+        per_token = 2 * n_active + heads_flops + enc_flops_per_token
+        return b * s * per_token + b * head
+    per_token = 2 * n_active + heads_flops + head
+    return b * per_token

@@ -1,0 +1,13 @@
+"""Model zoo.
+
+pointnet2.py       the paper's model (PointNet++ cls/seg) with swappable
+                   PC2IM preprocessing + SC-quantized MLPs
+layers.py          shared transformer primitives (RMSNorm, RoPE, GQA, SwiGLU)
+transformer.py     dense decoder LMs (incl. local:global sliding-window mixes)
+moe.py             top-k routed mixture-of-experts FFN
+mamba2.py          SSD (state-space duality) blocks
+rglru.py           Griffin RG-LRU recurrent blocks
+whisper.py         encoder-decoder (audio frontend stubbed per assignment)
+vlm.py             ViT-frontend-stub + LM backbone
+nn.py              param-dict linear/mlp/init utilities + quant_mode hook
+"""

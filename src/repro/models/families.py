@@ -1,0 +1,644 @@
+"""Uniform per-family model API.
+
+Every family exposes:
+    init(key, cfg)                          -> params
+    train_loss(params, cfg, batch)          -> (loss, metrics)
+    prefill(params, cfg, batch, s_max)      -> (logits, decode state)
+    decode_step(params, cfg, state, batch)  -> (logits, new state)
+    init_decode_state(cfg, batch, s_max)    -> zeroed decode state (dry-run)
+
+Batches (input_specs in launch/shapes.py mirror these):
+    dense/moe : {tokens, labels}                     | decode: {token}
+    ssm/hybrid: same
+    encdec    : {enc_embeds, tokens, labels}         | decode: {token} (+cross cache)
+    vlm       : {patch_embeds, tokens, labels}       | decode: {token}
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import nn
+from repro.models import transformer as T
+from repro.models.layers import (
+    KVCache,
+    attn_apply,
+    attn_init,
+    decode_attention,
+    glu_mlp_apply,
+    glu_mlp_init,
+    dense_mlp_apply,
+    dense_mlp_init,
+    rmsnorm_init,
+)
+from repro.models.mamba2 import SSMCache, mamba2_apply, mamba2_dims, mamba2_init
+from repro.models.rglru import LRUCache, rglru_apply, rglru_init
+from repro.sharding.hints import hint_residual
+
+
+# ===========================================================================
+# SSM family (mamba2)
+# ===========================================================================
+
+def ssm_init(key, cfg: ModelConfig):
+    dtype = cfg.dtype
+    keys = jax.random.split(key, 3)
+    layer_keys = jax.random.split(keys[2], cfg.n_layers)
+
+    def one(k):
+        return {
+            "norm": rmsnorm_init(cfg.d_model, dtype),
+            "mixer": mamba2_init(k, cfg, dtype),
+        }
+
+    return {
+        "embed": (jax.random.normal(keys[0], (cfg.vocab_size, cfg.d_model)) * 0.02).astype(dtype),
+        "blocks": jax.vmap(one)(layer_keys),
+        "final_norm": rmsnorm_init(cfg.d_model, dtype),
+    }
+
+
+class SSMState(NamedTuple):
+    caches: Any  # SSMCache stacked (L, ...)
+    cache_len: jax.Array
+
+
+def _ssm_backbone(params, cfg, h, collect_cache: bool):
+    def body(hh, lp):
+        out, new_cache, _ = mamba2_apply(lp["mixer"], cfg, T._norm_apply(cfg, lp["norm"], hh))
+        hh = hint_residual(hh + out)
+        return hh, (new_cache if collect_cache else None)
+
+    body = T._maybe_remat(cfg, body) if not collect_cache else body
+    h, caches = jax.lax.scan(body, h, params["blocks"])
+    return T._norm_apply(cfg, params["final_norm"], h), caches
+
+
+def ssm_train_loss(params, cfg, batch):
+    tokens = batch["tokens"]
+    with nn.quant_mode(cfg.quant):
+        h = jnp.take(params["embed"], tokens, axis=0)
+        h, _ = _ssm_backbone(params, cfg, h, collect_cache=False)
+        loss = T.chunked_cross_entropy(
+            h, params["embed"].T, batch["labels"], chunk=cfg.loss_chunk
+        )
+    return loss, {"loss": loss}
+
+
+def ssm_init_decode_state(cfg, batch: int, s_max: int) -> SSMState:
+    d_inner, n_heads, conv_dim = mamba2_dims(cfg)
+    cache = SSMCache(
+        state=jnp.zeros((cfg.n_layers, batch, n_heads, cfg.ssm_headdim, cfg.ssm_state), jnp.float32),
+        conv=jnp.zeros((cfg.n_layers, batch, cfg.ssm_conv - 1, conv_dim), cfg.dtype),
+    )
+    return SSMState(caches=cache, cache_len=jnp.zeros((), jnp.int32))
+
+
+def ssm_prefill(params, cfg, batch, s_max: int | None = None):
+    tokens = batch["tokens"]
+    s = tokens.shape[1]
+    with nn.quant_mode(cfg.quant):
+        h = jnp.take(params["embed"], tokens, axis=0)
+
+        def body(hh, lp):
+            out, new_cache, _ = mamba2_apply(lp["mixer"], cfg, T._norm_apply(cfg, lp["norm"], hh))
+            return hh + out, new_cache
+
+        h, caches = jax.lax.scan(body, h, params["blocks"])
+        h = T._norm_apply(cfg, params["final_norm"], h)
+        logits = (h[:, -1:] @ params["embed"].T).astype(jnp.float32)
+    return logits, SSMState(caches=caches, cache_len=jnp.full((), s, jnp.int32))
+
+
+def ssm_decode_step(params, cfg, state: SSMState, batch):
+    token = batch["token"]
+    with nn.quant_mode(cfg.quant):
+        h = jnp.take(params["embed"], token, axis=0)
+
+        def body(hh, xs):
+            lp, cache = xs
+            out, new_cache, _ = mamba2_apply(
+                lp["mixer"], cfg, T._norm_apply(cfg, lp["norm"], hh), cache=cache
+            )
+            return hh + out, new_cache
+
+        h, caches = jax.lax.scan(body, h, (params["blocks"], state.caches))
+        h = T._norm_apply(cfg, params["final_norm"], h)
+        logits = (h @ params["embed"].T).astype(jnp.float32)
+    return logits, SSMState(caches=caches, cache_len=state.cache_len + 1)
+
+
+# ===========================================================================
+# Hybrid family (recurrentgemma: pattern recurrent/recurrent/local-attn)
+# ===========================================================================
+
+def _hybrid_slot_init(cfg, key, slot_type, dtype):
+    k1, k2 = jax.random.split(key)
+    p = {"ln1": rmsnorm_init(cfg.d_model, dtype), "ln2": rmsnorm_init(cfg.d_model, dtype)}
+    if slot_type == "recurrent":
+        p["mixer"] = rglru_init(k1, cfg, dtype)
+    else:
+        p["mixer"] = attn_init(k1, T.attn_cfg_for(cfg, slot_type), dtype)
+    p["mlp"] = glu_mlp_init(k2, cfg.d_model, cfg.d_ff, bias=cfg.use_bias, dtype=dtype)
+    return p
+
+
+def hybrid_geometry(cfg: ModelConfig) -> tuple[int, int, int]:
+    g = len(cfg.layer_pattern)
+    return cfg.n_layers // g, g, cfg.n_layers % g
+
+
+def hybrid_init(key, cfg: ModelConfig):
+    dtype = cfg.dtype
+    n_groups, g, rem = hybrid_geometry(cfg)
+    keys = jax.random.split(key, 3)
+    slot_params = []
+    for s, slot_type in enumerate(cfg.layer_pattern):
+        gkeys = jax.random.split(jax.random.fold_in(keys[1], s), n_groups)
+        slot_params.append(
+            jax.vmap(lambda k: _hybrid_slot_init(cfg, k, slot_type, dtype))(gkeys)
+        )
+    rem_params = [
+        _hybrid_slot_init(cfg, jax.random.fold_in(keys[2], r), cfg.layer_pattern[r], dtype)
+        for r in range(rem)
+    ]
+    return {
+        "embed": (jax.random.normal(keys[0], (cfg.vocab_size, cfg.d_model)) * 0.02).astype(dtype),
+        "blocks": slot_params,
+        "rem": rem_params,
+        "final_norm": rmsnorm_init(cfg.d_model, dtype),
+    }
+
+
+def _hybrid_slot_apply(cfg, slot_type, p, h, *, positions, cache=None, cache_len=None):
+    x = T._norm_apply(cfg, p["ln1"], h)
+    if slot_type == "recurrent":
+        out, new_cache = rglru_apply(p["mixer"], cfg, x, cache=cache)
+    else:
+        acfg = T.attn_cfg_for(cfg, slot_type)
+        if cache is None:
+            out, kv = attn_apply(
+                p["mixer"], acfg, x, positions=positions,
+                collect_kv=True, attn_block=cfg.attn_block,
+            )
+            new_cache = KVCache(*kv)
+        else:
+            s_eff = cache.k.shape[1]
+            out, new_cache = attn_apply(
+                p["mixer"], acfg, x, positions=positions, cache=cache,
+                write_idx=jnp.mod(cache_len, s_eff),
+                attend_len=jnp.minimum(cache_len + 1, s_eff),
+                decode_window=None, attn_block=cfg.attn_block,
+            )
+    h = h + out
+    h = h + glu_mlp_apply(p["mlp"], T._norm_apply(cfg, p["ln2"], h), act=cfg.act)
+    return h, new_cache
+
+
+class HybridState(NamedTuple):
+    group_caches: Any  # tuple per slot (stacked over groups)
+    rem_caches: Any  # tuple per remainder layer
+    cache_len: jax.Array
+
+
+def _hybrid_zero_cache(cfg, slot_type, batch, s_max, stack: int | None):
+    if slot_type == "recurrent":
+        w = cfg.lru_width or cfg.d_model
+        shape_h = (batch, w)
+        shape_c = (batch, 3, w)
+        c = LRUCache(h=jnp.zeros(shape_h, jnp.float32), conv=jnp.zeros(shape_c, cfg.dtype))
+    else:
+        s_eff = min(s_max, cfg.window) if cfg.window else s_max
+        shape = (batch, s_eff, cfg.n_kv_heads, cfg.head_dim)
+        c = KVCache(jnp.zeros(shape, cfg.dtype), jnp.zeros(shape, cfg.dtype))
+    if stack is None:
+        return c
+    return jax.tree.map(lambda a: jnp.broadcast_to(a[None], (stack,) + a.shape), c)
+
+
+def hybrid_init_decode_state(cfg, batch: int, s_max: int) -> HybridState:
+    n_groups, g, rem = hybrid_geometry(cfg)
+    group_caches = tuple(
+        _hybrid_zero_cache(cfg, st, batch, s_max, n_groups) for st in cfg.layer_pattern
+    )
+    rem_caches = tuple(
+        _hybrid_zero_cache(cfg, cfg.layer_pattern[r], batch, s_max, None) for r in range(rem)
+    )
+    return HybridState(group_caches, rem_caches, jnp.zeros((), jnp.int32))
+
+
+def _hybrid_run(params, cfg, h, positions, *, state: HybridState | None, collect: bool):
+    """Shared stack runner.  state=None: train; collect: gather prefill caches."""
+    decode = state is not None and h.shape[1] == 1
+
+    def group_body(hh, xs):
+        group_params = xs[0]
+        caches = xs[1:] if decode else (None,) * len(cfg.layer_pattern)
+        outs = []
+        for s, slot_type in enumerate(cfg.layer_pattern):
+            hh, aux = _hybrid_slot_apply(
+                cfg, slot_type, group_params[s], hh, positions=positions,
+                cache=caches[s] if decode else None,
+                cache_len=state.cache_len if decode else None,
+            )
+            hh = hint_residual(hh)
+            outs.append(aux)
+        return hh, tuple(outs)
+
+    body = group_body if (decode or collect) else T._maybe_remat(cfg, group_body)
+    if decode:
+        xs = (tuple(params["blocks"]), *state.group_caches)
+    else:
+        xs = (tuple(params["blocks"]),)
+    h, group_out = jax.lax.scan(body, h, xs)
+
+    rem_out = []
+    for r, rp in enumerate(params["rem"]):
+        slot_type = cfg.layer_pattern[r]
+        hh_cache = state.rem_caches[r] if decode else None
+        h, aux = _hybrid_slot_apply(
+            cfg, slot_type, rp, h, positions=positions,
+            cache=hh_cache, cache_len=state.cache_len if decode else None,
+        )
+        rem_out.append(aux)
+    h = T._norm_apply(cfg, params["final_norm"], h)
+    return h, group_out, tuple(rem_out)
+
+
+def hybrid_train_loss(params, cfg, batch):
+    tokens = batch["tokens"]
+    s = tokens.shape[1]
+    with nn.quant_mode(cfg.quant):
+        h = jnp.take(params["embed"], tokens, axis=0)
+        h, _, _ = _hybrid_run(params, cfg, h, jnp.arange(s)[None], state=None, collect=False)
+        loss = T.chunked_cross_entropy(h, params["embed"].T, batch["labels"], chunk=cfg.loss_chunk)
+    return loss, {"loss": loss}
+
+
+def hybrid_prefill(params, cfg, batch, s_max: int | None = None):
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    s_max = s_max or s
+    with nn.quant_mode(cfg.quant):
+        h = jnp.take(params["embed"], tokens, axis=0)
+        h, group_out, rem_out = _hybrid_run(
+            params, cfg, h, jnp.arange(s)[None], state=None, collect=True
+        )
+        logits = (h[:, -1:] @ params["embed"].T).astype(jnp.float32)
+
+    def fit_kv(kv: KVCache, stacked: bool):
+        """Truncate to the rolling-window size and ALIGN slots so that
+        position p lives at slot p % s_eff (the decode write invariant)."""
+        s_eff = min(s_max, cfg.window) if cfg.window else s_max
+        k, v = kv
+        ax = 2 if stacked else 1
+        cur = k.shape[ax]
+        if cur > s_eff:
+            sl = [slice(None)] * k.ndim
+            sl[ax] = slice(cur - s_eff, cur)
+            k, v = k[tuple(sl)], v[tuple(sl)]
+            shift = s % s_eff
+            if shift:
+                k, v = jnp.roll(k, shift, axis=ax), jnp.roll(v, shift, axis=ax)
+        elif cur < s_eff:
+            pad = [(0, 0)] * k.ndim
+            pad[ax] = (0, s_eff - cur)
+            k, v = jnp.pad(k, pad), jnp.pad(v, pad)
+        return KVCache(k, v)
+
+    group_caches = tuple(
+        fit_kv(c, True) if hasattr(c, "k") else c for c in group_out
+    )
+    rem_caches = tuple(
+        fit_kv(c, False) if hasattr(c, "k") else c for c in rem_out
+    )
+    return logits, HybridState(group_caches, rem_caches, jnp.full((), s, jnp.int32))
+
+
+def hybrid_decode_step(params, cfg, state: HybridState, batch):
+    token = batch["token"]
+    pos = state.cache_len.reshape(1, 1)
+    with nn.quant_mode(cfg.quant):
+        h = jnp.take(params["embed"], token, axis=0)
+        h, group_out, rem_out = _hybrid_run(params, cfg, h, pos, state=state, collect=False)
+        logits = (h @ params["embed"].T).astype(jnp.float32)
+    return logits, HybridState(group_out, rem_out, state.cache_len + 1)
+
+
+# ===========================================================================
+# Encoder-decoder family (whisper — audio frontend stubbed per assignment)
+# ===========================================================================
+
+def _sinusoidal_pos(s: int, d: int) -> jax.Array:
+    pos = jnp.arange(s)[:, None].astype(jnp.float32)
+    dim = jnp.arange(d // 2)[None, :].astype(jnp.float32)
+    inv = jnp.exp(-jnp.log(10000.0) * dim / (d // 2))
+    ang = pos * inv
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _enc_slot_init(cfg, key, dtype):
+    k1, k2 = jax.random.split(key)
+    acfg = T.attn_cfg_for(cfg, "global")
+    return {
+        "ln1": T._norm_init(cfg, cfg.d_model, dtype),
+        "attn": attn_init(k1, acfg, dtype),
+        "ln2": T._norm_init(cfg, cfg.d_model, dtype),
+        "mlp": dense_mlp_init(k2, cfg.d_model, cfg.d_ff, bias=cfg.use_bias, dtype=dtype),
+    }
+
+
+def _dec_slot_init(cfg, key, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    acfg = T.attn_cfg_for(cfg, "global")
+    return {
+        "ln1": T._norm_init(cfg, cfg.d_model, dtype),
+        "self_attn": attn_init(k1, acfg, dtype),
+        "ln_x": T._norm_init(cfg, cfg.d_model, dtype),
+        "cross_attn": attn_init(k2, acfg, dtype),
+        "ln2": T._norm_init(cfg, cfg.d_model, dtype),
+        "mlp": dense_mlp_init(k3, cfg.d_model, cfg.d_ff, bias=cfg.use_bias, dtype=dtype),
+    }
+
+
+def encdec_init(key, cfg: ModelConfig):
+    dtype = cfg.dtype
+    ke, kd, kt = jax.random.split(key, 3)
+    enc_keys = jax.random.split(ke, cfg.encoder_layers)
+    dec_keys = jax.random.split(kd, cfg.n_layers)
+    return {
+        "embed": (jax.random.normal(kt, (cfg.vocab_size, cfg.d_model)) * 0.02).astype(dtype),
+        "enc_blocks": jax.vmap(lambda k: _enc_slot_init(cfg, k, dtype))(enc_keys),
+        "dec_blocks": jax.vmap(lambda k: _dec_slot_init(cfg, k, dtype))(dec_keys),
+        "enc_norm": T._norm_init(cfg, cfg.d_model, dtype),
+        "final_norm": T._norm_init(cfg, cfg.d_model, dtype),
+    }
+
+
+def _encode(params, cfg, enc_embeds):
+    """enc_embeds: (B, S_enc, D) — the stubbed conv-frontend output."""
+    s = enc_embeds.shape[1]
+    h = enc_embeds + _sinusoidal_pos(s, cfg.d_model)[None].astype(enc_embeds.dtype)
+    positions = jnp.arange(s)[None]
+    acfg = T.attn_cfg_for(cfg, "global", causal=False)
+
+    def body(hh, lp):
+        x = T._norm_apply(cfg, lp["ln1"], hh)
+        a, _ = attn_apply(lp["attn"], acfg, x, positions=positions, attn_block=cfg.attn_block)
+        hh = hh + a
+        hh = hh + dense_mlp_apply(lp["mlp"], T._norm_apply(cfg, lp["ln2"], hh), act="gelu")
+        return hint_residual(hh), None
+
+    h, _ = jax.lax.scan(T._maybe_remat(cfg, body), h, params["enc_blocks"])
+    return T._norm_apply(cfg, params["enc_norm"], h)
+
+
+def _dec_slot_apply(cfg, p, h, enc_out, *, positions, self_cache=None, cache_len=None,
+                    cross_kv=None, collect=False):
+    acfg = T.attn_cfg_for(cfg, "global")
+    x = T._norm_apply(cfg, p["ln1"], h)
+    if self_cache is None:
+        a, kv = attn_apply(p["self_attn"], acfg, x, positions=positions,
+                           collect_kv=collect, attn_block=cfg.attn_block)
+        new_self = KVCache(*kv) if collect else None
+    else:
+        a, new_self = attn_apply(
+            p["self_attn"], acfg, x, positions=positions, cache=self_cache,
+            write_idx=cache_len, attend_len=cache_len + 1, attn_block=cfg.attn_block,
+        )
+    h = h + a
+    xq = T._norm_apply(cfg, p["ln_x"], h)
+    if cross_kv is None:
+        # train/prefill: compute cross K/V from encoder output
+        c, ckv = attn_apply(
+            p["cross_attn"], T.attn_cfg_for(cfg, "global", causal=False), xq,
+            positions=positions, kv_override=(enc_out, enc_out),
+            collect_kv=False, attn_block=cfg.attn_block,
+        )
+        b, se, _ = enc_out.shape
+        hk, dh = cfg.n_kv_heads, cfg.head_dim
+        k = nn.linear(p["cross_attn"]["wk"], enc_out).reshape(b, se, hk, dh)
+        v = nn.linear(p["cross_attn"]["wv"], enc_out).reshape(b, se, hk, dh)
+        new_cross = KVCache(k, v) if collect else None
+    else:
+        # decode: attend over cached cross K/V
+        b = xq.shape[0]
+        hq, dh = cfg.n_heads, cfg.head_dim
+        q = nn.linear(p["cross_attn"]["wq"], xq).reshape(b, 1, hq, dh)
+        o = decode_attention(q, cross_kv.k, cross_kv.v, cache_len=cross_kv.k.shape[1])
+        c = nn.linear(p["cross_attn"]["wo"], o.reshape(b, 1, hq * dh))
+        new_cross = cross_kv
+    h = h + c
+    h = h + dense_mlp_apply(p["mlp"], T._norm_apply(cfg, p["ln2"], h), act="gelu")
+    return h, new_self, new_cross
+
+
+class EncDecState(NamedTuple):
+    self_caches: Any  # KVCache stacked (L, B, S_max, Hkv, Dh)
+    cross_caches: Any  # KVCache stacked (L, B, S_enc, Hkv, Dh)
+    cache_len: jax.Array
+
+
+def encdec_train_loss(params, cfg, batch):
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    positions = jnp.arange(s)[None]
+    with nn.quant_mode(cfg.quant):
+        enc_out = _encode(params, cfg, batch["enc_embeds"])
+        h = jnp.take(params["embed"], tokens, axis=0)
+        h = h + _sinusoidal_pos(s, cfg.d_model)[None].astype(h.dtype)
+
+        def body(hh, lp):
+            hh, _, _ = _dec_slot_apply(cfg, lp, hh, enc_out, positions=positions)
+            return hint_residual(hh), None
+
+        h, _ = jax.lax.scan(T._maybe_remat(cfg, body), h, params["dec_blocks"])
+        h = T._norm_apply(cfg, params["final_norm"], h)
+        loss = T.chunked_cross_entropy(h, params["embed"].T, batch["labels"], chunk=cfg.loss_chunk)
+    return loss, {"loss": loss}
+
+
+def encdec_init_decode_state(cfg, batch: int, s_max: int, s_enc: int | None = None) -> EncDecState:
+    s_enc = s_enc or s_max
+    l = cfg.n_layers
+    shape_s = (l, batch, s_max, cfg.n_kv_heads, cfg.head_dim)
+    shape_x = (l, batch, s_enc, cfg.n_kv_heads, cfg.head_dim)
+    z = lambda sh: jnp.zeros(sh, cfg.dtype)
+    return EncDecState(
+        self_caches=KVCache(z(shape_s), z(shape_s)),
+        cross_caches=KVCache(z(shape_x), z(shape_x)),
+        cache_len=jnp.zeros((), jnp.int32),
+    )
+
+
+def encdec_prefill(params, cfg, batch, s_max: int | None = None):
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    s_max = s_max or s
+    positions = jnp.arange(s)[None]
+    with nn.quant_mode(cfg.quant):
+        enc_out = _encode(params, cfg, batch["enc_embeds"])
+        h = jnp.take(params["embed"], tokens, axis=0)
+        h = h + _sinusoidal_pos(s, cfg.d_model)[None].astype(h.dtype)
+
+        def body(hh, lp):
+            hh, sc, cc = _dec_slot_apply(
+                cfg, lp, hh, enc_out, positions=positions, collect=True
+            )
+            return hh, (sc, cc)
+
+        h, (self_kv, cross_kv) = jax.lax.scan(body, h, params["dec_blocks"])
+        h = T._norm_apply(cfg, params["final_norm"], h)
+        logits = (h[:, -1:] @ params["embed"].T).astype(jnp.float32)
+    if s_max > s:
+        pad = [(0, 0), (0, 0), (0, s_max - s), (0, 0), (0, 0)]
+        self_kv = KVCache(jnp.pad(self_kv.k, pad), jnp.pad(self_kv.v, pad))
+    return logits, EncDecState(self_kv, cross_kv, jnp.full((), s, jnp.int32))
+
+
+def encdec_decode_step(params, cfg, state: EncDecState, batch):
+    token = batch["token"]
+    pos = state.cache_len.reshape(1, 1)
+    with nn.quant_mode(cfg.quant):
+        h = jnp.take(params["embed"], token, axis=0)
+        # absolute (sinusoidal) decoder position, gathered at the current index
+        table = _sinusoidal_pos(state.self_caches.k.shape[2], cfg.d_model)
+        h = h + jnp.take(table, pos, axis=0).astype(h.dtype)
+
+        def body(hh, xs):
+            lp, sc, cc = xs
+            hh, new_sc, new_cc = _dec_slot_apply(
+                cfg, lp, hh, None, positions=pos,
+                self_cache=sc, cache_len=state.cache_len, cross_kv=cc,
+            )
+            return hh, (new_sc, new_cc)
+
+        h, (self_kv, cross_kv) = jax.lax.scan(
+            body, h, (params["dec_blocks"], state.self_caches, state.cross_caches)
+        )
+        h = T._norm_apply(cfg, params["final_norm"], h)
+        logits = (h @ params["embed"].T).astype(jnp.float32)
+    return logits, EncDecState(self_kv, cross_kv, state.cache_len + 1)
+
+
+# ===========================================================================
+# VLM family (internvl2: ViT-frontend stub + dense LM backbone)
+# ===========================================================================
+
+def vlm_init(key, cfg: ModelConfig):
+    params = T.init_lm(key, cfg)
+    # stub frontend projection: patch embeds arrive at d_model (assignment),
+    # a single learned projection models the mlp1 connector
+    params["patch_proj"] = nn.linear_init(
+        jax.random.fold_in(key, 7), cfg.d_model, cfg.d_model, bias=True, dtype=cfg.dtype
+    )
+    return params
+
+
+def vlm_embed(params, cfg, batch):
+    """concat(projected patch embeds, token embeds) -> (B, P + S_text, D)."""
+    patches = nn.linear(params["patch_proj"], batch["patch_embeds"].astype(cfg.dtype))
+    tok = jnp.take(params["embed"], batch["tokens"], axis=0)
+    return jnp.concatenate([patches, tok], axis=1)
+
+
+def vlm_train_loss(params, cfg, batch):
+    with nn.quant_mode(cfg.quant):
+        h = vlm_embed(params, cfg, batch)
+        s = h.shape[1]
+        h = T.backbone(params, cfg, h, jnp.arange(s)[None])
+        n_p = batch["patch_embeds"].shape[1]
+        h_text = h[:, n_p:]
+        loss = T.chunked_cross_entropy(
+            h_text, T.lm_head_weights(params, cfg), batch["labels"], chunk=cfg.loss_chunk
+        )
+    return loss, {"loss": loss}
+
+
+def vlm_prefill(params, cfg, batch, s_max: int | None = None):
+    """Prefill over [patches; prompt tokens].  Reuses the dense-LM cache path
+    by running the group scan with collect_kv on the combined embedding."""
+    with nn.quant_mode(cfg.quant):
+        h = vlm_embed(params, cfg, batch)
+    b, s, _ = h.shape
+    s_max = s_max or s
+    positions = jnp.arange(s)[None]
+    with nn.quant_mode(cfg.quant):
+        def group_body(hh, group_params):
+            kvs = []
+            for slot, slot_type in enumerate(cfg.layer_pattern):
+                hh, kv = T._block_apply(
+                    cfg, slot_type, group_params[slot], hh,
+                    positions=positions, collect_kv=True,
+                )
+                kvs.append(KVCache(*kv))
+            return hh, tuple(kvs)
+
+        h, kv_stacked = jax.lax.scan(group_body, h, tuple(params["blocks"]))
+        h = T._norm_apply(cfg, params["final_norm"], h)
+        logits = (h[:, -1:] @ T.lm_head_weights(params, cfg)).astype(jnp.float32)
+    caches = []
+    for slot in range(len(cfg.layer_pattern)):
+        k, v = kv_stacked[slot]
+        if s_max > s:
+            pad = [(0, 0), (0, 0), (0, s_max - s), (0, 0), (0, 0)]
+            k, v = jnp.pad(k, pad), jnp.pad(v, pad)
+        caches.append(KVCache(k, v))
+    return logits, T.DecodeState(caches=tuple(caches), cache_len=jnp.full((), s, jnp.int32))
+
+
+def vlm_decode_step(params, cfg, state, batch):
+    return T.decode_step(params, cfg, state, batch["token"])
+
+
+# ===========================================================================
+# Dispatch
+# ===========================================================================
+
+def get_family_api(cfg: ModelConfig) -> dict:
+    fam = cfg.family
+    if fam in ("dense", "moe"):
+        return {
+            "init": T.init_lm,
+            "train_loss": T.lm_loss,
+            "prefill": lambda p, c, b, s_max=None: T.prefill(p, c, b["tokens"], s_max),
+            "decode_step": lambda p, c, st, b: T.decode_step(p, c, st, b["token"]),
+            "init_decode_state": T.init_decode_state,
+        }
+    if fam == "ssm":
+        return {
+            "init": ssm_init,
+            "train_loss": ssm_train_loss,
+            "prefill": ssm_prefill,
+            "decode_step": ssm_decode_step,
+            "init_decode_state": ssm_init_decode_state,
+        }
+    if fam == "hybrid":
+        return {
+            "init": hybrid_init,
+            "train_loss": hybrid_train_loss,
+            "prefill": hybrid_prefill,
+            "decode_step": hybrid_decode_step,
+            "init_decode_state": hybrid_init_decode_state,
+        }
+    if fam == "encdec":
+        return {
+            "init": encdec_init,
+            "train_loss": encdec_train_loss,
+            "prefill": encdec_prefill,
+            "decode_step": encdec_decode_step,
+            "init_decode_state": encdec_init_decode_state,
+        }
+    if fam == "vlm":
+        return {
+            "init": vlm_init,
+            "train_loss": vlm_train_loss,
+            "prefill": vlm_prefill,
+            "decode_step": vlm_decode_step,
+            "init_decode_state": T.init_decode_state,
+        }
+    raise ValueError(f"unknown family {fam}")

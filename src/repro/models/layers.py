@@ -1,0 +1,519 @@
+"""Shared transformer primitives: RMSNorm, RoPE, GQA attention (train/decode),
+block-pair flash attention, gated MLPs.
+
+Attention design notes (these drive the dry-run memory + roofline quality):
+
+* `flash_attention`: blockwise online-softmax attention implemented as a
+  lax.scan over a STATICALLY-ENUMERATED list of (q_block, kv_block) pairs.
+  - memory: never materialises (S, S) scores — required for the 32k cells
+    (dense scores for command-r prefill_32k would be ~2.2 PB global).
+  - FLOPs honesty: causal/windowed patterns enumerate only the needed
+    block pairs at trace time, so compiled HLO FLOPs match the true
+    mathematical work (a masked-dense implementation would double-count
+    causal FLOPs and corrupt the §Roofline compute term).
+  - pairs are ordered row-major per q block; running (max, denom, acc)
+    stats live in the scan carry, updated via dynamic slices.
+
+* decode: single-token q against the KV cache — dense O(S) row attention
+  (no flash needed; memory is the cache itself).
+
+* GQA: kv heads broadcast to q heads via reshape-free einsum grouping.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import nn
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d: int, dtype=jnp.float32):
+    return {"g": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    # f32 stats + f32 normalise (bf16-applied variant measured WORSE on the
+    # 104B cell: the product-rule backward adds full-size intermediates —
+    # §Perf cell-A iteration 3, refuted)
+    x32 = x.astype(jnp.float32)
+    y = x32 * jax.lax.rsqrt(jnp.mean(x32 * x32, axis=-1, keepdims=True) + eps)
+    return (y * p["g"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(d_head: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, Dh), positions: (..., S) int32."""
+    d_head = x.shape[-1]
+    freqs = rope_freqs(d_head, theta)  # (Dh/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, Dh/2)
+    sin = jnp.sin(ang)[..., None, :]  # (..., S, 1, Dh/2)
+    cos = jnp.cos(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Flash attention over static block pairs
+# ---------------------------------------------------------------------------
+
+_NEG_INF = -2.0e38
+
+
+def _block_pairs(nb: int, causal: bool, window_blocks: int | None) -> list[tuple[int, int]]:
+    """Statically enumerate needed (q_block, kv_block) pairs, row-major."""
+    pairs = []
+    for i in range(nb):
+        lo = 0 if window_blocks is None else max(0, i - window_blocks)
+        hi = i if causal else nb - 1
+        for j in range(lo, hi + 1):
+            pairs.append((i, j))
+    return pairs
+
+
+def _pick_block(n: int, want: int) -> int:
+    blk = min(want, n)
+    if n % blk:
+        for cand in (256, 128, 64, 32, 16, 8, 4, 2, 1):
+            if n % cand == 0:
+                return cand
+    return blk
+
+
+def _flash_geometry(s: int, sk: int, causal: bool, window, block: int):
+    blk = _pick_block(math.gcd(s, sk), block)
+    nb, nkb = s // blk, sk // blk
+    wb = None if window is None else max(1, (window + blk - 1) // blk)
+    if causal:
+        pairs = _block_pairs(nb, True, wb)
+    else:
+        pairs = [(i, j) for i in range(nb) for j in range(nkb)]
+    return blk, pairs
+
+
+def _pair_mask(i, j, blk, causal, window):
+    span = jnp.arange(blk)
+    qpos = i * blk + span[:, None]
+    kpos = j * blk + span[None, :]
+    mask = jnp.ones((blk, blk), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window is not None:
+        mask &= qpos - kpos < window
+    return mask
+
+
+def _flash_fwd_impl(cfg, q, k, v):
+    """Returns (out (B,Hq,S,Dh) f32, lse (B,Hq,S,1) f32).  Layout (B,H,S,D)."""
+    causal, window, blk, pairs, scale = cfg
+    b, hq, s, dh = q.shape
+    hkv = k.shape[1]
+    g = hq // hkv
+    pi = jnp.asarray([p[0] for p in pairs], jnp.int32)
+    pj = jnp.asarray([p[1] for p in pairs], jnp.int32)
+
+    acc0 = jnp.zeros((b, hq, s, dh), jnp.float32)
+    m0 = jnp.full((b, hq, s, 1), _NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hq, s, 1), jnp.float32)
+
+    def body(carry, ij):
+        acc, m, l = carry
+        i, j = ij
+        qi = jax.lax.dynamic_slice_in_dim(q, i * blk, blk, axis=2)
+        kj = jax.lax.dynamic_slice_in_dim(k, j * blk, blk, axis=2)
+        vj = jax.lax.dynamic_slice_in_dim(v, j * blk, blk, axis=2)
+        qi_g = (qi * scale).reshape(b, hkv, g, blk, dh)
+        scores = jnp.einsum(
+            "bhgqd,bhkd->bhgqk", qi_g, kj, preferred_element_type=jnp.float32
+        )
+        mask = _pair_mask(i, j, blk, causal, window)
+        scores = jnp.where(mask[None, None, None], scores, _NEG_INF)
+        scores = scores.reshape(b, hq, blk, blk)
+
+        mi = jax.lax.dynamic_slice_in_dim(m, i * blk, blk, axis=2)
+        li = jax.lax.dynamic_slice_in_dim(l, i * blk, blk, axis=2)
+        acci = jax.lax.dynamic_slice_in_dim(acc, i * blk, blk, axis=2)
+
+        m_new = jnp.maximum(mi, scores.max(-1, keepdims=True))
+        safe_m = jnp.where(m_new <= _NEG_INF / 2, 0.0, m_new)
+        # masked scores are -NEG_INF: exp underflows to exactly 0 — no second
+        # mask pass needed (one less full-block buffer per pair, §Perf A.3)
+        p = jnp.exp(scores - safe_m)
+        corr = jnp.where(mi <= _NEG_INF / 2, 0.0, jnp.exp(mi - safe_m))
+        l_new = corr * li + p.sum(-1, keepdims=True)
+        pv = jnp.einsum(
+            "bhgqk,bhkd->bhgqd",
+            p.reshape(b, hkv, g, blk, blk).astype(v.dtype),
+            vj,
+            preferred_element_type=jnp.float32,
+        ).reshape(b, hq, blk, dh)
+        acc_new = corr * acci + pv
+
+        acc = jax.lax.dynamic_update_slice_in_dim(acc, acc_new, i * blk, axis=2)
+        m = jax.lax.dynamic_update_slice_in_dim(m, m_new, i * blk, axis=2)
+        l = jax.lax.dynamic_update_slice_in_dim(l, l_new, i * blk, axis=2)
+        return (acc, m, l), None
+
+    (acc, m, l), _ = jax.lax.scan(body, (acc0, m0, l0), (pi, pj))
+    out = acc / jnp.maximum(l, 1e-20)
+    lse = jnp.where(l > 0, m + jnp.log(jnp.maximum(l, 1e-20)), _NEG_INF)
+    return out, lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _flash_core(cfg, q, k, v):
+    out, _ = _flash_fwd_impl(cfg, q, k, v)
+    return out
+
+
+def _flash_core_fwd(cfg, q, k, v):
+    out, lse = _flash_fwd_impl(cfg, q, k, v)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_core_bwd(cfg, res, dout):
+    """FA2-style backward: recompute p per block pair from (q, k, lse) —
+    residuals are O(S*Dh), never the (S, S) score matrix.  This is the
+    memory-roofline-critical path for every 4k/32k train/prefill cell."""
+    causal, window, blk, pairs, scale = cfg
+    q, k, v, out, lse = res
+    b, hq, s, dh = q.shape
+    hkv = k.shape[1]
+    g = hq // hkv
+    dout = dout.astype(jnp.float32)
+    # D_i = rowsum(dO * O)  (B,Hq,S,1)
+    dvec = jnp.sum(dout * out, axis=-1, keepdims=True)
+    pi = jnp.asarray([p[0] for p in pairs], jnp.int32)
+    pj = jnp.asarray([p[1] for p in pairs], jnp.int32)
+
+    dq0 = jnp.zeros((b, hq, s, dh), jnp.float32)
+    dk0 = jnp.zeros((b, hkv, k.shape[2], dh), jnp.float32)
+    dv0 = jnp.zeros_like(dk0)
+
+    def body(carry, ij):
+        dq, dk, dv = carry
+        i, j = ij
+        qi = jax.lax.dynamic_slice_in_dim(q, i * blk, blk, axis=2)
+        kj = jax.lax.dynamic_slice_in_dim(k, j * blk, blk, axis=2)
+        vj = jax.lax.dynamic_slice_in_dim(v, j * blk, blk, axis=2)
+        lsei = jax.lax.dynamic_slice_in_dim(lse, i * blk, blk, axis=2)
+        di = jax.lax.dynamic_slice_in_dim(dvec, i * blk, blk, axis=2)
+        doi = jax.lax.dynamic_slice_in_dim(dout, i * blk, blk, axis=2)
+
+        qi_g = (qi * scale).reshape(b, hkv, g, blk, dh)
+        scores = jnp.einsum(
+            "bhgqd,bhkd->bhgqk", qi_g, kj, preferred_element_type=jnp.float32
+        ).reshape(b, hq, blk, blk)
+        mask = _pair_mask(i, j, blk, causal, window)
+        scores = jnp.where(mask[None, None], scores, _NEG_INF)  # single mask pass
+        safe_lse = jnp.where(lsei <= _NEG_INF / 2, 0.0, lsei)
+        p = jnp.exp(scores - safe_lse)  # masked -> exp underflow -> exactly 0
+
+        doi_g = doi.reshape(b, hkv, g, blk, dh)
+        p_g = p.reshape(b, hkv, g, blk, blk)
+        # dV_j += P^T dO   (sum over q block and group)
+        dvj = jnp.einsum("bhgqk,bhgqd->bhkd", p_g, doi_g)
+        # dP = dO V^T
+        dp = jnp.einsum("bhgqd,bhkd->bhgqk", doi_g, vj.astype(jnp.float32))
+        ds = p_g * (dp - di.reshape(b, hkv, g, blk, 1))
+        # dQ_i += dS K * scale ; dK_j += dS^T Q * scale
+        dqi = jnp.einsum("bhgqk,bhkd->bhgqd", ds, kj.astype(jnp.float32)) * scale
+        dkj = jnp.einsum("bhgqk,bhgqd->bhkd", ds, qi.reshape(b, hkv, g, blk, dh).astype(jnp.float32)) * scale
+
+        upd_q = jax.lax.dynamic_slice_in_dim(dq, i * blk, blk, axis=2) + dqi.reshape(b, hq, blk, dh)
+        dq = jax.lax.dynamic_update_slice_in_dim(dq, upd_q, i * blk, axis=2)
+        upd_k = jax.lax.dynamic_slice_in_dim(dk, j * blk, blk, axis=2) + dkj
+        dk = jax.lax.dynamic_update_slice_in_dim(dk, upd_k, j * blk, axis=2)
+        upd_v = jax.lax.dynamic_slice_in_dim(dv, j * blk, blk, axis=2) + dvj
+        dv = jax.lax.dynamic_update_slice_in_dim(dv, upd_v, j * blk, axis=2)
+        return (dq, dk, dv), None
+
+    (dq, dk, dv), _ = jax.lax.scan(body, (dq0, dk0, dv0), (pi, pj))
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+_flash_core.defvjp(_flash_core_fwd, _flash_core_bwd)
+
+
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    block: int = 512,
+    scale: float | None = None,
+) -> jax.Array:
+    """q: (B, S, Hq, Dh), k/v: (B, Skv, Hkv, Dh) -> (B, S, Hq, Dh).
+
+    Blockwise online-softmax attention over a STATIC list of (q, kv) block
+    pairs (causal/window pairs enumerated at trace time: exact FLOPs, no
+    masked-dense waste) with a hand-written FA2-style custom_vjp backward
+    (residuals O(S*Dh); p recomputed per pair — never an (S,S) buffer).
+    """
+    b, s, hq, dh = q.shape
+    sk = k.shape[1]
+    hkv = k.shape[2]
+    assert hq % hkv == 0
+    scale = scale if scale is not None else 1.0 / math.sqrt(dh)
+    if causal and s != sk:
+        raise ValueError("causal flash attention requires q_len == kv_len")
+    blk, pairs = _flash_geometry(s, sk, causal, window, block)
+    cfg = (causal, window, blk, tuple(pairs), scale)
+    qh = q.transpose(0, 2, 1, 3)  # (B,Hq,S,Dh)
+    kh = k.transpose(0, 2, 1, 3)
+    vh = v.transpose(0, 2, 1, 3)
+    out = _flash_core(cfg, qh, kh, vh)
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)
+
+
+def decode_attention(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    *,
+    cache_len: jax.Array | int,
+    window: int | None = None,
+    scale: float | None = None,
+) -> jax.Array:
+    """Single-position attention against a cache.
+
+    q: (B, 1, Hq, Dh); k/v_cache: (B, S, Hkv, Dh); positions >= cache_len
+    are masked.  Returns (B, 1, Hq, Dh).
+    """
+    b, s, hkv, dh = k_cache.shape
+    hq = q.shape[2]
+    g = hq // hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(dh)
+    qg = (q[:, 0] * scale).reshape(b, hkv, g, dh)
+    scores = jnp.einsum(
+        "bhgd,bshd->bhgs", qg, k_cache, preferred_element_type=jnp.float32
+    )
+    pos = jnp.arange(s)
+    valid = pos[None] < jnp.asarray(cache_len).reshape(-1, 1)  # (B, S) or (1, S)
+    if window is not None:
+        valid = valid & (pos[None] >= jnp.asarray(cache_len).reshape(-1, 1) - window)
+    scores = jnp.where(valid[:, None, None], scores, _NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", p.astype(v_cache.dtype), v_cache)
+    return out.reshape(b, 1, hq, dh).astype(q.dtype)
+
+
+def decode_attention_quant(
+    q: jax.Array,
+    cache: "QuantKVCache",
+    *,
+    cache_len: jax.Array | int,
+    window: int | None = None,
+    scale: float | None = None,
+) -> jax.Array:
+    """Decode attention over an int8 cache — scales factor OUT of both
+    contractions (exact algebra, no dequantised cache copy):
+
+        scores[s] = (q . k_q[s]) * ks[s]          (per-token-head scale)
+        out[d]    = sum_s (p[s] * vs[s]) * v_q[s,d]
+    """
+    b, s, hkv, dh = cache.k.shape
+    hq = q.shape[2]
+    g = hq // hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(dh)
+    qg = (q[:, 0].astype(jnp.float32) * scale).reshape(b, hkv, g, dh)
+    scores = jnp.einsum(
+        "bhgd,bshd->bhgs", qg, cache.k.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    scores = scores * cache.ks[..., 0].transpose(0, 2, 1)[:, :, None, :]  # (B,Hkv,1,S)
+    pos = jnp.arange(s)
+    valid = pos[None] < jnp.asarray(cache_len).reshape(-1, 1)
+    if window is not None:
+        valid = valid & (pos[None] >= jnp.asarray(cache_len).reshape(-1, 1) - window)
+    scores = jnp.where(valid[:, None, None], scores, _NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)  # (B,Hkv,g,S)
+    p_scaled = p * cache.vs[..., 0].transpose(0, 2, 1)[:, :, None, :]
+    out = jnp.einsum(
+        "bhgs,bshd->bhgd", p_scaled.astype(jnp.float32), cache.v.astype(jnp.float32)
+    )
+    return out.reshape(b, 1, hq, dh).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention block (params + apply for train/prefill/decode)
+# ---------------------------------------------------------------------------
+
+class KVCache(NamedTuple):
+    k: jax.Array  # (B, S_max, Hkv, Dh)
+    v: jax.Array
+
+
+class QuantKVCache(NamedTuple):
+    """Int8 KV cache (paper C1 transplanted: shrink the temporaries'
+    bit-width to cut the memory-bound decode's cache traffic ~2x).
+
+    Per-(token, head) symmetric scales; dequantisation happens inside the
+    attention reads, so HBM only ever sees int8 values + tiny scales."""
+
+    k: jax.Array  # (B, S_max, Hkv, Dh) int8
+    v: jax.Array  # int8
+    ks: jax.Array  # (B, S_max, Hkv, 1) f32
+    vs: jax.Array
+
+
+def quantize_kv(x: jax.Array):
+    """(B, S, H, D) float -> (int8 values, f32 per-(token,head) scales)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_kv(q: jax.Array, scale: jax.Array, dtype) -> jax.Array:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    rope_theta: float = 10000.0
+    window: int | None = None  # sliding window (None = global)
+    causal: bool = True
+    use_bias: bool = False
+    qk_norm: bool = False
+
+
+def attn_init(key, cfg: AttnConfig, dtype=jnp.float32):
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    d, h, hk, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    p = {
+        "wq": nn.linear_init(kq, d, h * dh, bias=cfg.use_bias, dtype=dtype),
+        "wk": nn.linear_init(kk, d, hk * dh, bias=cfg.use_bias, dtype=dtype),
+        "wv": nn.linear_init(kv, d, hk * dh, bias=cfg.use_bias, dtype=dtype),
+        "wo": nn.linear_init(ko, h * dh, d, bias=cfg.use_bias, dtype=dtype),
+    }
+    if cfg.qk_norm:
+        p["qnorm"] = rmsnorm_init(dh, dtype)
+        p["knorm"] = rmsnorm_init(dh, dtype)
+    return p
+
+
+def attn_apply(
+    p,
+    cfg: AttnConfig,
+    x: jax.Array,
+    *,
+    positions: jax.Array,
+    cache: KVCache | None = None,
+    write_idx: jax.Array | int | None = None,
+    attend_len: jax.Array | int | None = None,
+    kv_override: tuple[jax.Array, jax.Array] | None = None,
+    collect_kv: bool = False,
+    decode_window: int | None = None,
+    attn_block: int = 512,
+):
+    """x: (B, S, D).  Train/prefill when cache is None; decode (S==1) writes
+    new K/V at `write_idx` and attends over `attend_len` entries (rolling
+    local-window caches pass write_idx = pos % window, attend_len =
+    min(pos+1, window), decode_window=None since the buffer is pre-bounded).
+    kv_override supplies cross-attention K/V source.
+    Returns (out (B,S,D), aux) — aux is the new KVCache in decode, the fresh
+    (k, v) when collect_kv, else None."""
+    b, s, _ = x.shape
+    h, hk, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    q = nn.linear(p["wq"], x).reshape(b, s, h, dh)
+    if kv_override is None:
+        k = nn.linear(p["wk"], x).reshape(b, s, hk, dh)
+        v = nn.linear(p["wv"], x).reshape(b, s, hk, dh)
+    else:
+        xkv = kv_override[0]
+        sk = xkv.shape[1]
+        k = nn.linear(p["wk"], xkv).reshape(b, sk, hk, dh)
+        v = nn.linear(p["wv"], xkv).reshape(b, sk, hk, dh)
+    if cfg.qk_norm:
+        q = rmsnorm(p["qnorm"], q)
+        k = rmsnorm(p["knorm"], k)
+    if cfg.rope_theta > 0 and kv_override is None:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+
+    aux = None
+    if cache is not None and kv_override is None:
+        # decode: write the new K/V, attend over the valid prefix
+        idx = jnp.asarray(write_idx, jnp.int32).reshape(())
+        if isinstance(cache, QuantKVCache):
+            kq, ks = quantize_kv(k)
+            vq, vs = quantize_kv(v)
+            ck = jax.lax.dynamic_update_slice_in_dim(cache.k, kq, idx, axis=1)
+            cv = jax.lax.dynamic_update_slice_in_dim(cache.v, vq, idx, axis=1)
+            cks = jax.lax.dynamic_update_slice_in_dim(cache.ks, ks, idx, axis=1)
+            cvs = jax.lax.dynamic_update_slice_in_dim(cache.vs, vs, idx, axis=1)
+            aux = QuantKVCache(ck, cv, cks, cvs)
+            out = decode_attention_quant(
+                q, aux, cache_len=attend_len, window=decode_window
+            )
+        else:
+            ck = jax.lax.dynamic_update_slice_in_dim(cache.k, k.astype(cache.k.dtype), idx, axis=1)
+            cv = jax.lax.dynamic_update_slice_in_dim(cache.v, v.astype(cache.v.dtype), idx, axis=1)
+            aux = KVCache(ck, cv)
+            out = decode_attention(q, ck, cv, cache_len=attend_len, window=decode_window)
+    elif kv_override is not None and s == 1:
+        out = decode_attention(q, k, v, cache_len=k.shape[1], window=None)
+    elif kv_override is not None:
+        out = flash_attention(q, k, v, causal=False, window=None, block=attn_block)
+    else:
+        out = flash_attention(
+            q, k, v, causal=cfg.causal, window=cfg.window, block=attn_block
+        )
+        if collect_kv:
+            aux = (k, v)
+    out = nn.linear(p["wo"], out.reshape(b, s, h * dh))
+    return out, aux
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def glu_mlp_init(key, d_model: int, d_ff: int, *, bias: bool = False, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wi": nn.linear_init(k1, d_model, d_ff, bias=bias, dtype=dtype),
+        "wg": nn.linear_init(k2, d_model, d_ff, bias=bias, dtype=dtype),
+        "wo": nn.linear_init(k3, d_ff, d_model, bias=bias, dtype=dtype),
+    }
+
+
+def glu_mlp_apply(p, x: jax.Array, act: str = "silu") -> jax.Array:
+    a = {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[act]
+    return nn.linear(p["wo"], a(nn.linear(p["wg"], x)) * nn.linear(p["wi"], x))
+
+
+def dense_mlp_init(key, d_model: int, d_ff: int, *, bias: bool = True, dtype=jnp.float32):
+    k1, k2 = jax.random.split(key)
+    return {
+        "wi": nn.linear_init(k1, d_model, d_ff, bias=bias, dtype=dtype),
+        "wo": nn.linear_init(k2, d_ff, d_model, bias=bias, dtype=dtype),
+    }
+
+
+def dense_mlp_apply(p, x: jax.Array, act: str = "gelu") -> jax.Array:
+    a = {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[act]
+    return nn.linear(p["wo"], a(nn.linear(p["wi"], x)))

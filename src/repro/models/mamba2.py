@@ -1,0 +1,189 @@
+"""Mamba-2 (SSD — state-space duality, arXiv:2405.21060) blocks.
+
+Train/prefill uses the chunked SSD algorithm: quadratic attention-like math
+*within* chunks (Q=ssm_chunk) + a linear recurrence over chunk states:
+
+  per chunk c:   L = exp(segsum(dtA))            (intra-chunk decay, Q x Q)
+                 Y_diag = (C B^T . L) X           (intra-chunk)
+                 S_c    = (decay . B)^T X         (chunk state contribution)
+  across chunks: S'_{c} = exp(sum dtA_c) S'_{c-1} + S_c   (lax.scan)
+                 Y_off  = C S'_{c-1} with in-chunk decay
+
+Decode is the O(1) recurrent update  s = exp(dtA) s + dt B x;  y = C s + D x.
+
+Layout: x (B, S, H, P) with H = expand*d_model / headdim heads, state N.
+The chunk scan keeps HLO compact and the state pass is exact (no window
+approximation) — this is why mamba2 runs the long_500k cell.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import nn
+from repro.models.layers import rmsnorm, rmsnorm_init
+
+
+class SSMCache(NamedTuple):
+    state: jax.Array  # (B, H, P, N) f32
+    conv: jax.Array  # (B, W-1, conv_dim) rolling conv inputs
+
+
+def mamba2_dims(cfg):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    n_heads = d_inner // cfg.ssm_headdim
+    conv_dim = d_inner + 2 * cfg.ssm_state  # x, B, C all convolved
+    return d_inner, n_heads, conv_dim
+
+
+def mamba2_init(key, cfg, dtype=jnp.float32):
+    d = cfg.d_model
+    d_inner, n_heads, conv_dim = mamba2_dims(cfg)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    # in_proj -> [z (gate), x, B, C, dt]
+    d_in_proj = 2 * d_inner + 2 * cfg.ssm_state + n_heads
+    return {
+        "in_proj": nn.linear_init(k1, d, d_in_proj, bias=False, dtype=dtype),
+        "conv_w": (jax.random.normal(k2, (cfg.ssm_conv, conv_dim)) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, n_heads)).astype(jnp.float32),
+        "D": jnp.ones((n_heads,), jnp.float32),
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        "norm": rmsnorm_init(d_inner, dtype),
+        "out_proj": nn.linear_init(k3, d_inner, d, bias=False, dtype=dtype),
+    }
+
+
+def _causal_conv_train(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv.  x: (B, S, C), w: (W, C) -> (B, S, C)."""
+    width = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(width):  # W=4: unrolled shift-mul-add (depthwise)
+        out = out + xp[:, i : i + x.shape[1]] * w[i][None, None, :]
+    return out + b[None, None, :]
+
+
+def _segsum(dta: jax.Array) -> jax.Array:
+    """dta: (..., Q) -> (..., Q, Q) lower-tri cumulative sums: sum_{j<m<=i} dta_m."""
+    q = dta.shape[-1]
+    cum = jnp.cumsum(dta, axis=-1)
+    diff = cum[..., :, None] - cum[..., None, :]  # (..., Q, Q): sum over (j, i]
+    mask = jnp.tril(jnp.ones((q, q), bool), 0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_forward(x, dt, A, B, C, *, chunk: int):
+    """Chunked SSD.  x: (b, s, h, p); dt: (b, s, h); A: (h,) (negative);
+    B, C: (b, s, n).  Returns (y (b,s,h,p), final_state (b,h,p,n))."""
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    q = min(chunk, s)
+    while s % q:
+        q //= 2
+    nc = s // q
+
+    xc = x.reshape(b, nc, q, h, p)
+    dtc = dt.reshape(b, nc, q, h)
+    Bc = B.reshape(b, nc, q, n)
+    Cc = C.reshape(b, nc, q, n)
+    dta = dtc * A[None, None, None, :]  # (b, nc, q, h) negative decays
+
+    # intra-chunk ("diagonal") term
+    L = jnp.exp(_segsum(dta.transpose(0, 1, 3, 2)))  # (b, nc, h, q, q)
+    scores = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)  # (b, nc, q, q)
+    # weight by dt at the source position j
+    y_diag = jnp.einsum(
+        "bchij,bcij,bcjh,bcjhp->bcihp", L, scores, dtc, xc
+    )
+
+    # chunk state contributions: S_c = sum_j decay_to_end_j * dt_j * B_j x_j^T
+    decay_end = jnp.exp(
+        jnp.cumsum(dta[..., ::-1, :], axis=2)[..., ::-1, :] - dta
+    )  # (b, nc, q, h): product of decays AFTER position j within chunk
+    states = jnp.einsum("bcjh,bcjh,bcjn,bcjhp->bchpn", decay_end, dtc, Bc, xc)
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(jnp.sum(dta, axis=2))  # (b, nc, h)
+
+    def scan_fn(s_prev, inp):
+        st, dec = inp  # (b, h, p, n), (b, h)
+        s_new = s_prev * dec[..., None, None] + st
+        return s_new, s_prev  # emit the state BEFORE this chunk
+
+    init = jnp.zeros((b, h, p, n), jnp.float32)
+    final_state, prev_states = jax.lax.scan(
+        scan_fn,
+        init,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+    )
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)  # (b, nc, h, p, n)
+
+    # off-diagonal (cross-chunk) term: decay from chunk start to position i
+    decay_in = jnp.exp(jnp.cumsum(dta, axis=2))  # (b, nc, q, h)
+    y_off = jnp.einsum("bcin,bcih,bchpn->bcihp", Cc, decay_in, prev_states)
+
+    y = (y_diag + y_off).reshape(b, s, h, p)
+    return y, final_state
+
+
+def mamba2_apply(p, cfg, x: jax.Array, cache: SSMCache | None = None):
+    """x: (B, S, d_model).  Train/prefill (cache None) or decode (S == 1)."""
+    bsz, s, _ = x.shape
+    d_inner, n_heads, conv_dim = mamba2_dims(cfg)
+    n = cfg.ssm_state
+
+    zxbcdt = nn.linear(p["in_proj"], x)  # (B, S, 2*d_inner + 2n + H)
+    z = zxbcdt[..., :d_inner]  # gate
+    xbc = zxbcdt[..., d_inner : d_inner + conv_dim]  # x, B, C (convolved)
+    dt_raw = zxbcdt[..., d_inner + conv_dim :]  # (B, S, H)
+
+    new_cache = None
+    xbc_raw = xbc
+    if cache is None:
+        xbc = _causal_conv_train(xbc, p["conv_w"], p["conv_b"])
+    else:
+        # decode: rolling conv state (B, W-1, conv_dim)
+        width = cfg.ssm_conv
+        hist = jnp.concatenate([cache.conv, xbc], axis=1)  # (B, W, C)
+        xbc = (
+            jnp.einsum("bwc,wc->bc", hist, p["conv_w"]) + p["conv_b"]
+        )[:, None, :]
+        new_conv = hist[:, 1:]
+    xbc = jax.nn.silu(xbc)
+
+    xs = xbc[..., :d_inner].reshape(bsz, s, n_heads, cfg.ssm_headdim)
+    B = xbc[..., d_inner : d_inner + n]
+    C = xbc[..., d_inner + n :]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    A = -jnp.exp(p["A_log"])  # (H,) negative
+
+    if cache is None:
+        y, final_state = ssd_forward(
+            xs.astype(jnp.float32), dt, A, B.astype(jnp.float32), C.astype(jnp.float32),
+            chunk=cfg.ssm_chunk,
+        )
+        # full prefill cache: ssm state + rolling conv tail (raw, pre-conv)
+        width = cfg.ssm_conv
+        tail = xbc_raw[:, -(width - 1) :] if s >= width - 1 else jnp.pad(
+            xbc_raw, ((0, 0), (width - 1 - s, 0), (0, 0))
+        )
+        new_cache = SSMCache(state=final_state, conv=tail)
+        aux_state = final_state
+    else:
+        # O(1) recurrent step
+        dta = jnp.exp(dt[:, 0] * A[None, :])  # (B, H)
+        sx = xs[:, 0].astype(jnp.float32)  # (B, H, P)
+        dbx = jnp.einsum("bh,bn,bhp->bhpn", dt[:, 0], B[:, 0].astype(jnp.float32), sx)
+        state = cache.state * dta[..., None, None] + dbx
+        y = jnp.einsum("bn,bhpn->bhp", C[:, 0].astype(jnp.float32), state)[:, None]
+        new_cache = SSMCache(state=state, conv=new_conv)
+        aux_state = state
+
+    y = y + xs.astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(bsz, s, d_inner).astype(x.dtype)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z))
+    return nn.linear(p["out_proj"], y), new_cache, aux_state

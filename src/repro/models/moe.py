@@ -1,0 +1,91 @@
+"""Top-k routed mixture-of-experts FFN (dbrx 16e/top-4, granite 40e/top-8).
+
+Dispatch is capacity-based gather/scatter (GShard-style semantics without the
+giant one-hot dispatch einsum):
+
+  router logits -> top-k experts per token -> per-(expert, k-slot) priority
+  rank via cumsum -> tokens beyond capacity C = ceil(T*k/E * cf) are DROPPED
+  (standard capacity overflow) -> gather (E, C, d) -> batched expert GLU
+  (einsum over stacked (E, d, ff) weights) -> weighted scatter-add back.
+
+Sharding: tokens arrive (B, S, d) sharded batch-over-'data'; expert weights
+(E, d, ff) shard E over 'model' -> the gather/scatter becomes an all-to-all
+over the mesh (visible in the §Roofline collective term — MoE cells are the
+collective-bound candidates).  Router compute stays replicated-small.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import nn
+
+
+def moe_init(key, cfg, dtype=jnp.float32):
+    e, d, f = cfg.n_experts, cfg.d_model, cfg.d_ff
+    kr, ki, kg, ko = jax.random.split(key, 4)
+    s_in = 1.0 / jnp.sqrt(d)
+    s_out = 1.0 / jnp.sqrt(f)
+    return {
+        "router": nn.linear_init(kr, d, e, bias=False, dtype=jnp.float32),
+        "wi": (jax.random.normal(ki, (e, d, f)) * s_in).astype(dtype),
+        "wg": (jax.random.normal(kg, (e, d, f)) * s_in).astype(dtype),
+        "wo": (jax.random.normal(ko, (e, f, d)) * s_out).astype(dtype),
+    }
+
+
+def moe_apply(p, cfg, x: jax.Array) -> jax.Array:
+    """x: (B, S, d) -> (B, S, d).  Capacity-dropped top-k routing.
+
+    Each batch row is a routing GROUP (GShard grouping): the capacity-rank
+    cumsum stays local to the 'data' shard; only the expert-buffer einsums
+    cross the mesh (all-to-all when experts shard over 'model')."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    cap = int(max(1, round(s * k / e * cfg.capacity_factor)))
+
+    def route_group(xt):  # (S, d) -> (E, C, d), (S*k meta)
+        logits = nn.linear(p["router"], xt.astype(jnp.float32))  # (S, E)
+        probs = jax.nn.softmax(logits, axis=-1)
+        top_p, top_e = jax.lax.top_k(probs, k)  # (S, k)
+        top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+        flat_e = top_e.reshape(-1)  # (S*k,) ordered by (token, slot)
+        onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)
+        rank_in_e = jnp.cumsum(onehot, axis=0) - 1
+        my_rank = jnp.take_along_axis(rank_in_e, flat_e[:, None], axis=1)[:, 0]
+        keep = my_rank < cap
+        buf_row = jnp.where(keep, flat_e, e)  # dropped -> scratch row e
+        buf_col = jnp.where(keep, my_rank, 0)
+        token_of = jnp.repeat(jnp.arange(s), k)
+        expert_in = jnp.zeros((e + 1, cap, d), x.dtype)
+        expert_in = expert_in.at[buf_row, buf_col].set(xt[token_of], mode="drop")
+        return expert_in[:e], (buf_row, buf_col, token_of, top_p.reshape(-1), keep)
+
+    expert_in, meta = jax.vmap(route_group)(x)  # (B, E, C, d)
+
+    # --- batched expert GLU over stacked weights (E shards over 'model') ---
+    act = {"silu": jax.nn.silu, "gelu": jax.nn.gelu}[cfg.act]
+    hidden = act(jnp.einsum("becd,edf->becf", expert_in, p["wg"])) * jnp.einsum(
+        "becd,edf->becf", expert_in, p["wi"]
+    )
+    expert_out = jnp.einsum("becf,efd->becd", hidden, p["wo"])  # (B, E, C, d)
+
+    def unroute_group(eo, m):  # (E, C, d) -> (S, d)
+        buf_row, buf_col, token_of, w_flat, keep = m
+        gathered = eo[buf_row.clip(0, e - 1), buf_col]  # (S*k, d)
+        w = (w_flat * keep).astype(x.dtype)
+        return jnp.zeros((s, d), x.dtype).at[token_of].add(gathered * w[:, None])
+
+    return jax.vmap(unroute_group)(expert_out, meta)
+
+
+def moe_aux_loss(p, cfg, x: jax.Array) -> jax.Array:
+    """Load-balance auxiliary loss (Switch-style): E * sum_e f_e * p_e."""
+    t = x.shape[0] * x.shape[1]
+    logits = nn.linear(p["router"], x.reshape(t, -1).astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_e = jnp.argmax(probs, axis=-1)
+    frac = jnp.mean(jax.nn.one_hot(top_e, cfg.n_experts), axis=0)
+    imp = jnp.mean(probs, axis=0)
+    return cfg.n_experts * jnp.sum(frac * imp)

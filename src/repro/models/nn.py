@@ -1,0 +1,100 @@
+"""Minimal functional NN utilities (no flax): params are plain dicts of arrays.
+
+Every dense layer routes through `linear(...)`, which honours the module-level
+quant mode — the paper's C4 (SC W16A16) exposed to all architectures:
+
+    with quant_mode("sc_w16a16"):  # or configure per-model
+        y = nn.linear(params, x)
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import quantized_linear
+
+_STATE = threading.local()
+
+
+def current_quant_mode() -> str:
+    return getattr(_STATE, "mode", "none")
+
+
+@contextlib.contextmanager
+def quant_mode(mode: str):
+    """'none' | 'sc_w16a16' | 'sc_w8a8' — applies to every linear() inside."""
+    prev = current_quant_mode()
+    _STATE.mode = mode
+    try:
+        yield
+    finally:
+        _STATE.mode = prev
+
+
+def linear_init(key, d_in: int, d_out: int, *, bias: bool = True, scale: float | None = None, dtype=jnp.float32):
+    wkey, _ = jax.random.split(key)
+    std = scale if scale is not None else (1.0 / jnp.sqrt(d_in))
+    p = {"w": (jax.random.normal(wkey, (d_in, d_out)) * std).astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def linear(p, x: jax.Array) -> jax.Array:
+    mode = current_quant_mode()
+    if mode == "none":
+        y = x @ p["w"]
+    elif mode == "sc_w16a16":
+        y = quantized_linear(x, p["w"], bits=16).astype(x.dtype)
+    elif mode == "sc_w8a8":
+        y = quantized_linear(x, p["w"], bits=8).astype(x.dtype)
+    else:
+        raise ValueError(f"unknown quant mode {mode!r}")
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def layernorm_init(d: int, dtype=jnp.float32):
+    return {"g": jnp.ones((d,), dtype), "b": jnp.zeros((d,), dtype)}
+
+
+def layernorm(p, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    # stats in f32, normalisation applied in the input dtype (see rmsnorm)
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x - mu.astype(x.dtype)) * jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return y * p["g"] + p["b"]
+
+
+def mlp_init(key, channels: list[int], *, bias: bool = True, norm: bool = True, dtype=jnp.float32):
+    """Per-point MLP stack: [linear -> LN -> relu] per layer (LN in place of
+    the original BatchNorm — documented deviation, stats-free)."""
+    keys = jax.random.split(key, len(channels) - 1)
+    layers = []
+    for i, (cin, cout) in enumerate(zip(channels[:-1], channels[1:])):
+        lay = {"lin": linear_init(keys[i], cin, cout, bias=bias, dtype=dtype)}
+        if norm:
+            lay["ln"] = layernorm_init(cout, dtype)
+        layers.append(lay)
+    return {"layers": layers}
+
+
+def mlp_apply(p, x: jax.Array, *, final_act: bool = True) -> jax.Array:
+    n = len(p["layers"])
+    for i, lay in enumerate(p["layers"]):
+        x = linear(lay["lin"], x)
+        if "ln" in lay:
+            x = layernorm(lay["ln"], x)
+        if final_act or i < n - 1:
+            x = jax.nn.relu(x)
+    return x
+
+
+def count_params(tree) -> int:
+    return sum(x.size for x in jax.tree.leaves(tree))

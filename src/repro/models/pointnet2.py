@@ -1,0 +1,178 @@
+"""PointNet++ (PointNet2) — the paper's evaluation model — with PC2IM preprocessing.
+
+Set-abstraction (SA) stages: sample centroids (FPS), query neighbours, learn
+per-point features (MLP), max-pool per neighbourhood.  Feature-propagation
+(FP) stages (segmentation): 3-NN inverse-distance interpolation + unit MLPs.
+
+PC2IM switches, all config-selectable (benchmarked in fig12a/fig13):
+  preproc    : "baseline1" (global L2 FPS + ball)  |  "baseline2" (grid tiles)
+               | "pc2im" (MSP + L1 FPS + lattice query)
+  aggregation: "standard" (group->mlp->pool) | "delayed" (mlp->group->pool, C5)
+  quant      : "none" | "sc_w16a16" (C4; applies to every MLP linear)
+
+Note on delayed aggregation: standard SA feeds the MLP relative coordinates
+(neighbour - centroid), which cannot be precomputed per point.  Following
+Mesorasi [8] (which the paper adopts), the delayed path feeds *absolute*
+coords + features through the per-point MLP and aggregates afterwards.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import grouping as G
+from repro.core import preprocess as PP
+from repro.core import query as Q
+from repro.models import nn
+
+
+@dataclasses.dataclass(frozen=True)
+class SAConfig:
+    n_centroids: int
+    radius: float
+    nsample: int
+    mlp: tuple[int, ...]  # hidden/out channels (input inferred)
+
+
+@dataclasses.dataclass(frozen=True)
+class PointNet2Config:
+    name: str = "pointnet2"
+    task: Literal["cls", "seg"] = "cls"
+    n_points: int = 1024
+    n_classes: int = 8
+    in_features: int = 0  # extra per-point features beyond xyz
+    sa: tuple[SAConfig, ...] = (
+        SAConfig(256, 0.2, 32, (64, 64, 128)),
+        SAConfig(64, 0.4, 32, (128, 128, 256)),
+    )
+    global_mlp: tuple[int, ...] = (256, 512, 1024)  # final global SA (cls)
+    fp_mlp: tuple[int, ...] = (256, 128)  # per-FP-stage out channels (seg)
+    head: tuple[int, ...] = (512, 256)
+    preproc: Literal["baseline1", "baseline2", "pc2im"] = "pc2im"
+    aggregation: Literal["standard", "delayed"] = "delayed"
+    quant: Literal["none", "sc_w16a16", "sc_w8a8"] = "none"
+    msp_depth: int = 2  # MSP tiles = 2^depth (pc2im preproc)
+
+    @property
+    def family(self) -> str:
+        return "pointcloud"
+
+
+def init_params(key, cfg: PointNet2Config):
+    keys = iter(jax.random.split(key, 64))
+    params: dict = {"sa": []}
+    c_in = 3 + cfg.in_features
+    for sa in cfg.sa:
+        chans = [c_in] + list(sa.mlp)
+        params["sa"].append(nn.mlp_init(next(keys), chans))
+        c_in = sa.mlp[-1] + 3  # next stage consumes features + xyz
+    sa_out = cfg.sa[-1].mlp[-1]
+
+    if cfg.task == "cls":
+        params["global"] = nn.mlp_init(next(keys), [sa_out + 3] + list(cfg.global_mlp))
+        h = [cfg.global_mlp[-1]] + list(cfg.head) + [cfg.n_classes]
+        params["head"] = nn.mlp_init(next(keys), h, norm=False)
+    else:
+        # FP stages walk back up the SA pyramid
+        params["fp"] = []
+        skips = [3 + cfg.in_features] + [sa.mlp[-1] for sa in cfg.sa[:-1]]
+        c_coarse = sa_out
+        for i, skip_c in enumerate(reversed(skips)):
+            cout = cfg.fp_mlp[min(i, len(cfg.fp_mlp) - 1)]
+            params["fp"].append(nn.mlp_init(next(keys), [c_coarse + skip_c, cout, cout]))
+            c_coarse = cout
+        h = [c_coarse] + list(cfg.head) + [cfg.n_classes]
+        params["head"] = nn.mlp_init(next(keys), h, norm=False)
+    return params
+
+
+def _run_preproc(cfg: PointNet2Config, sa: SAConfig, xyz: jax.Array) -> PP.PreprocessResult:
+    if cfg.preproc == "pc2im":
+        n = xyz.shape[0]
+        depth = cfg.msp_depth
+        # keep tiles no smaller than 4x the per-tile sample count
+        while depth > 0 and (n >> depth) < 4 * max(1, sa.n_centroids >> depth):
+            depth -= 1
+        while depth > 0 and (n % (1 << depth) or sa.n_centroids % (1 << depth)):
+            depth -= 1
+        return PP.preprocess_pc2im(xyz, sa.n_centroids, sa.radius, sa.nsample, depth=depth)
+    if cfg.preproc == "baseline2":
+        return PP.preprocess_baseline2(xyz, sa.n_centroids, sa.radius, sa.nsample)
+    return PP.preprocess_baseline1(xyz, sa.n_centroids, sa.radius, sa.nsample)
+
+
+def _sa_stage(cfg, sa_cfg, mlp_params, xyz, feats):
+    """One set-abstraction stage on a single cloud.  Returns (new_xyz, new_feats)."""
+    res = _run_preproc(cfg, sa_cfg, xyz)
+    nbrs = res.neighbors
+    if cfg.aggregation == "delayed":
+        # C5: per-POINT mlp on [abs-xyz, feats], then gather + masked maxpool
+        x = xyz if feats is None else jnp.concatenate([xyz, feats], axis=-1)
+        new_feats = G.aggregate_delayed(x, nbrs, lambda v: nn.mlp_apply(mlp_params, v))
+    else:
+        rel = G.group_relative_coords(xyz, res.centroid_xyz, nbrs)  # (M,S,3)
+        if feats is None:
+            grouped = rel
+        else:
+            gf = G.group_features(feats, nbrs)  # (M,S,C)
+            grouped = jnp.concatenate([rel, gf], axis=-1)
+        new_feats = G.masked_maxpool(nn.mlp_apply(mlp_params, grouped), nbrs.mask)
+    return res.centroid_xyz, new_feats
+
+
+def _forward_single(params, cfg: PointNet2Config, points: jax.Array):
+    """points: (N, 3 + in_features) -> logits (cls: (C,), seg: (N, C))."""
+    xyz = points[:, :3]
+    feats = points[:, 3:] if cfg.in_features else None
+
+    levels = [(xyz, feats)]
+    for sa_cfg, mlp_p in zip(cfg.sa, params["sa"]):
+        xyz_i, feats_i = levels[-1]
+        levels.append(_sa_stage(cfg, sa_cfg, mlp_p, xyz_i, feats_i))
+
+    if cfg.task == "cls":
+        xyz_l, feats_l = levels[-1]
+        x = jnp.concatenate([xyz_l, feats_l], axis=-1)
+        x = nn.mlp_apply(params["global"], x)  # (M, C)
+        x = jnp.max(x, axis=0)  # global max pool
+        return nn.mlp_apply(params["head"], x, final_act=False)
+
+    # segmentation: FP stages walk the pyramid back from coarse to fine.
+    # Skip channels (mirrors init_params): intermediate levels contribute
+    # their SA features; the finest level contributes raw xyz(+input feats).
+    coarse_xyz, coarse_f = levels[-1]
+    n_fp = len(params["fp"])
+    for i, fp_p in enumerate(params["fp"]):
+        fine_xyz, fine_f = levels[n_fp - 1 - i]
+        idx, dist = Q.knn(fine_xyz, coarse_xyz, 3)
+        w = Q.three_nn_interpolate_weights(dist)
+        interp = G.interpolate_features(coarse_f, idx, w)  # (Nf, Cc)
+        if i == n_fp - 1:  # finest level: raw inputs as skip
+            skip = fine_xyz if fine_f is None else jnp.concatenate([fine_xyz, fine_f], -1)
+        else:
+            skip = fine_f
+        x = jnp.concatenate([interp, skip], axis=-1)
+        coarse_f = nn.mlp_apply(fp_p, x)
+        coarse_xyz = fine_xyz
+    return nn.mlp_apply(params["head"], coarse_f, final_act=False)
+
+
+def forward(params, cfg: PointNet2Config, points: jax.Array) -> jax.Array:
+    """Batched forward.  points: (B, N, 3+F) -> (B, C) or (B, N, C)."""
+    with nn.quant_mode(cfg.quant):
+        return jax.vmap(lambda p: _forward_single(params, cfg, p))(points)
+
+
+def loss_fn(params, cfg: PointNet2Config, points: jax.Array, labels: jax.Array):
+    logits = forward(params, cfg, points)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    if cfg.task == "cls":
+        nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1).mean()
+    else:
+        nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1).mean()
+    acc = (jnp.argmax(logits, -1) == labels).mean()
+    return nll, {"loss": nll, "accuracy": acc}

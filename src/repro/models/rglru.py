@@ -1,0 +1,103 @@
+"""RG-LRU (Real-Gated Linear Recurrent Unit) — Griffin / recurrentgemma
+(arXiv:2402.19427).
+
+    r_t = sigmoid(W_a x_t)                 (recurrence gate)
+    i_t = sigmoid(W_x x_t)                 (input gate)
+    a_t = a^(c * r_t)       a = sigmoid(Lambda), c = 8
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Train/prefill: associative scan over the sequence (exact, parallel).
+Decode: O(1) state update.  The recurrent block wraps the RG-LRU with a
+linear in-proj + short causal conv + gated output, per the Griffin paper.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import nn
+
+_C = 8.0
+
+
+class LRUCache(NamedTuple):
+    h: jax.Array  # (B, W) recurrent state f32
+    conv: jax.Array  # (B, conv-1, W) rolling conv inputs
+
+
+def rglru_init(key, cfg, dtype=jnp.float32):
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    return {
+        "in_x": nn.linear_init(k1, d, w, bias=False, dtype=dtype),
+        "in_y": nn.linear_init(k2, d, w, bias=False, dtype=dtype),
+        "conv_w": (jax.random.normal(k3, (4, w)) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((w,), dtype),
+        "gate_a": nn.linear_init(k4, w, w, bias=True, dtype=dtype),
+        "gate_x": nn.linear_init(k5, w, w, bias=True, dtype=dtype),
+        # Lambda init so that a = sigmoid(L)^c is in ~(0.9, 0.999)
+        "lam": jnp.log(jnp.linspace(0.9, 0.999, w) ** (1 / _C)
+                       / (1 - jnp.linspace(0.9, 0.999, w) ** (1 / _C))).astype(jnp.float32),
+        "out": nn.linear_init(jax.random.fold_in(key, 9), w, d, bias=False, dtype=dtype),
+    }
+
+
+def _lru_scan(x: jax.Array, a: jax.Array) -> jax.Array:
+    """h_t = a_t h_{t-1} + x_t via associative scan.  (B, S, W) f32."""
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, b1 * a2 + b2
+
+    a_s, b_s = jax.lax.associative_scan(combine, (a, x), axis=1)
+    return b_s
+
+
+def rglru_apply(p, cfg, x: jax.Array, cache: LRUCache | None = None):
+    """x: (B, S, d_model) -> (out, new_cache).  Griffin recurrent block."""
+    b, s, _ = x.shape
+    w = cfg.lru_width or cfg.d_model
+
+    gate_branch = jax.nn.gelu(nn.linear(p["in_y"], x))  # (B, S, W)
+    u = nn.linear(p["in_x"], x)  # (B, S, W)
+
+    # short causal conv (width 4, depthwise)
+    if cache is None:
+        width = p["conv_w"].shape[0]
+        up = jnp.pad(u, ((0, 0), (width - 1, 0), (0, 0)))
+        uc = jnp.zeros_like(u)
+        for i in range(width):
+            uc = uc + up[:, i : i + s] * p["conv_w"][i][None, None]
+        uc = uc + p["conv_b"][None, None]
+        conv_tail = u[:, -(width - 1) :] if s >= width - 1 else jnp.pad(
+            u, ((0, 0), (width - 1 - s, 0), (0, 0))
+        )
+    else:
+        hist = jnp.concatenate([cache.conv, u], axis=1)  # (B, W, C)
+        uc = (jnp.einsum("bwc,wc->bc", hist, p["conv_w"]) + p["conv_b"])[:, None]
+        conv_tail = hist[:, 1:]
+
+    # RG-LRU core (f32 for the recurrence)
+    ucf = uc.astype(jnp.float32)
+    r = jax.nn.sigmoid(nn.linear(p["gate_a"], uc).astype(jnp.float32))
+    i = jax.nn.sigmoid(nn.linear(p["gate_x"], uc).astype(jnp.float32))
+    log_a_base = jax.nn.log_sigmoid(p["lam"])[None, None, :]  # (1,1,W)
+    log_a = _C * r * log_a_base
+    a = jnp.exp(log_a)
+    gated_in = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * ucf)
+
+    if cache is None:
+        h = _lru_scan(gated_in, a)  # (B, S, W)
+        new_cache = LRUCache(h=h[:, -1], conv=conv_tail)
+    else:
+        h = a[:, 0] * cache.h + gated_in[:, 0]  # (B, W)
+        new_cache = LRUCache(h=h, conv=conv_tail)
+        h = h[:, None]
+
+    out = nn.linear(p["out"], (h.astype(x.dtype) * gate_branch))
+    return out, new_cache

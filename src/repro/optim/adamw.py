@@ -1,0 +1,92 @@
+"""AdamW with fp32 master weights + moments (no optax available: built native).
+
+State layout keeps the ZeRO property for free: every state leaf mirrors the
+parameter pytree, so whatever FSDP sharding the params carry applies to the
+moments and master copy identically (optimizer-state sharding = ZeRO-1/2/3
+depending on the param sharding policy).
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array  # int32 scalar
+    mu: Any  # first moment (fp32, param-shaped)
+    nu: Any  # second moment (fp32)
+    master: Any | None  # fp32 master params (None if params already fp32)
+
+
+def adamw_init(params, *, keep_master: bool | None = None) -> AdamWState:
+    f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    mu = jax.tree.map(f32, params)
+    nu = jax.tree.map(f32, params)
+    if keep_master is None:
+        keep_master = any(p.dtype != jnp.float32 for p in jax.tree.leaves(params))
+    master = jax.tree.map(lambda p: p.astype(jnp.float32), params) if keep_master else None
+    return AdamWState(step=jnp.zeros((), jnp.int32), mu=mu, nu=nu, master=master)
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree))
+    )
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+def adamw_update(
+    grads,
+    state: AdamWState,
+    params,
+    *,
+    lr: float | jax.Array,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+    max_grad_norm: float | None = 1.0,
+):
+    """Returns (new_params, new_state, metrics)."""
+    metrics = {}
+    if max_grad_norm is not None:
+        grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+        metrics["grad_norm"] = gnorm
+    step = state.step + 1
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, p, pm):
+        g32 = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g32
+        v = b2 * v + (1 - b2) * g32 * g32
+        mhat = m / bc1
+        vhat = v / bc2
+        p32 = pm if pm is not None else p.astype(jnp.float32)
+        p32 = p32 - lr * (mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p32)
+        return m, v, p32
+
+    leaves_p, treedef = jax.tree.flatten(params)
+    leaves_g = treedef.flatten_up_to(grads)
+    leaves_m = treedef.flatten_up_to(state.mu)
+    leaves_v = treedef.flatten_up_to(state.nu)
+    leaves_pm = (
+        treedef.flatten_up_to(state.master) if state.master is not None else [None] * len(leaves_p)
+    )
+    out = [upd(g, m, v, p, pm) for g, m, v, p, pm in zip(leaves_g, leaves_m, leaves_v, leaves_p, leaves_pm)]
+    new_mu = treedef.unflatten([o[0] for o in out])
+    new_nu = treedef.unflatten([o[1] for o in out])
+    new_p32 = [o[2] for o in out]
+    new_params = treedef.unflatten(
+        [p32.astype(p.dtype) for p32, p in zip(new_p32, leaves_p)]
+    )
+    new_master = treedef.unflatten(new_p32) if state.master is not None else None
+    return new_params, AdamWState(step, new_mu, new_nu, new_master), metrics

@@ -1,0 +1,53 @@
+"""Int8 gradient compression with error feedback (cross-pod all-reduce path).
+
+At multi-pod scale the gradient all-reduce crosses the slow DCN link; int8
+quantization cuts that traffic 4x (bf16->int8 halves, f32->int8 quarters).
+Error feedback (residual carried between steps) keeps the quantization
+noise unbiased-in-the-limit — SGD/Adam converge with the same schedule
+(1-bit Adam / PowerSGD literature).
+
+Usage inside a train step:
+    cgrads, new_err = compress_grads(grads, err)        # int8 + scales
+    # all-reduce / accumulate cgrads (int32-safe)
+    grads = decompress_grads(cgrads)
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class CompressedTree(NamedTuple):
+    q: Any  # int8 pytree
+    scale: Any  # f32 per-leaf scale
+
+
+def init_error_feedback(params) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress_grads(grads, err_feedback) -> tuple[CompressedTree, Any]:
+    """Quantize (g + err) to int8 per-leaf symmetric; return new residual."""
+
+    def one(g, e):
+        x = g.astype(jnp.float32) + e
+        amax = jnp.max(jnp.abs(x))
+        scale = jnp.maximum(amax, 1e-12) / 127.0
+        q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+        new_e = x - q.astype(jnp.float32) * scale
+        return q, scale, new_e
+
+    flat, treedef = jax.tree_util.tree_flatten(grads)
+    eflat = treedef.flatten_up_to(err_feedback)
+    out = [one(g, e) for g, e in zip(flat, eflat)]
+    q = treedef.unflatten([o[0] for o in out])
+    s = treedef.unflatten([o[1] for o in out])
+    new_err = treedef.unflatten([o[2] for o in out])
+    return CompressedTree(q=q, scale=s), new_err
+
+
+def decompress_grads(c: CompressedTree):
+    return jax.tree.map(lambda q, s: q.astype(jnp.float32) * s, c.q, c.scale)

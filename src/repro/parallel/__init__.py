@@ -1,0 +1,1 @@
+from repro.parallel.pipeline import pipeline_forward  # noqa: F401

@@ -1,0 +1,5 @@
+from repro.runtime.fault_tolerance import (  # noqa: F401
+    HeartbeatMonitor,
+    StragglerMonitor,
+    run_with_restarts,
+)

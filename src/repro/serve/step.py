@@ -1,0 +1,35 @@
+"""Serving steps: prefill + batched greedy/sampled decode."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.families import get_family_api
+
+
+def make_serve_fns(cfg: ModelConfig):
+    api = get_family_api(cfg)
+
+    def prefill_step(params, batch, s_max: int):
+        return api["prefill"](params, cfg, batch, s_max)
+
+    def decode_step(params, state, batch):
+        """One token for the whole batch; greedy next token included so the
+        lowered artifact covers the sampling epilogue."""
+        logits, state = api["decode_step"](params, cfg, state, batch)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        return logits, next_tok, state
+
+    def generate(params, batch, *, steps: int, s_max: int):
+        """Greedy autoregressive generation (examples/serving driver)."""
+        logits, state = prefill_step(params, batch, s_max)
+        tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        out = [tok]
+        for _ in range(steps - 1):
+            _, tok, state = decode_step(params, state, {"token": tok})
+            out.append(tok)
+        return jnp.concatenate(out, axis=1)
+
+    return {"prefill": prefill_step, "decode": decode_step, "generate": generate}

@@ -1,0 +1,6 @@
+from repro.sharding.policy import (  # noqa: F401
+    ShardingPolicy,
+    batch_pspecs,
+    param_pspecs,
+    state_pspecs,
+)

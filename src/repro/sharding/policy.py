@@ -1,0 +1,229 @@
+"""Partitioning policy: FSDP('data') x TP('model') x DP('pod').
+
+Correctness note: under GSPMD *any* PartitionSpec compiles to a correct
+program — the policy controls only where collectives appear and how much
+memory each device holds.  That makes the policy a legitimate perf knob for
+§Perf iterations: the default below is the tuned baseline; alternatives
+(pure-DP, no-FSDP, 2D-serve) are selectable for comparison.
+
+Default rules (train):
+  * 2D+ weight leaf: the most-shardable "output-ish" dim -> 'model' (TP),
+    a second divisible dim -> 'data' (FSDP/ZeRO-3; per-layer all-gathers
+    happen inside the scan and overlap with compute).
+  * Stacked leading scan dims ((n_groups, ...) / (L, ...) / (E, ...)):
+    expert dims shard over 'model' (expert parallelism); plain layer-stack
+    dims stay unsharded (slicing them per scan step must stay local).
+  * 1D leaves (norm gains, biases): replicated.
+  * 'pod' axis: pure DP — params replicated across pods, batch sharded;
+    the only cross-pod traffic is the gradient all-reduce.
+
+Serve: params shard 2D ('model' x 'data') the same way (weight-gathered
+serving); KV caches shard batch->'data' (or seq->'data' when batch==1) and
+kv-heads->'model' when divisible, else seq->'model' (flash-decoding-style
+partial-softmax combine is left to GSPMD's reduction handling).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPolicy:
+    name: str = "fsdp_tp"  # fsdp_tp | tp_only | dp_only
+    fsdp: bool = True  # shard a second weight dim over 'data'
+    expert_axis: str = "model"
+    # batch sharding axes (pod first when present)
+    data_axes: tuple[str, ...] = ("data",)
+    model_axis: str = "model"
+
+    def with_mesh(self, mesh: Mesh) -> "ShardingPolicy":
+        axes = tuple(mesh.axis_names)
+        data_axes = ("pod", "data") if "pod" in axes else ("data",)
+        return dataclasses.replace(self, data_axes=data_axes)
+
+
+POLICIES = {
+    "fsdp_tp": ShardingPolicy("fsdp_tp", fsdp=True),
+    "fsdp2d": ShardingPolicy("fsdp2d", fsdp=True),  # batch over both axes, weights gathered
+    "tp_only": ShardingPolicy("tp_only", fsdp=False),
+    "dp_only": ShardingPolicy("dp_only", fsdp=False),
+}
+
+
+# path keywords that mark a leading STACKED dim (scan over groups/layers)
+_STACKED_KEYS = ("blocks", "enc_blocks", "dec_blocks", "rem")
+# leaf-name hints: first dim is an expert dim
+_EXPERT_KEYS = ("wi", "wg", "wo")
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name]
+
+
+def _spec_for_weight(
+    path: str, shape: tuple[int, ...], mesh: Mesh, pol: ShardingPolicy, cfg: ModelConfig | None
+):
+    """Choose PartitionSpec for one parameter leaf."""
+    if pol.name == "dp_only" or len(shape) < 1:
+        return P()
+    ndim = len(shape)
+    spec: list[Any] = [None] * ndim
+    msize = _axis_size(mesh, pol.model_axis)
+    dsize = _axis_size(mesh, "data")
+
+    start = 0
+    stacked = any(f"{k}" in path for k in _STACKED_KEYS)
+    is_expert = (
+        cfg is not None
+        and cfg.n_experts > 0
+        and re.search(r"mlp/(wi|wg|wo)$", path) is not None
+        and ndim == 3
+    )
+    if is_expert:
+        # (E, d, f): experts over 'model' (pads if not divisible), fsdp on dim1
+        spec[0] = pol.model_axis
+        if pol.fsdp and shape[1] % dsize == 0:
+            spec[1] = "data"
+        return P(*spec)
+    if stacked and ndim >= 3:
+        start = 1  # leading scan dim stays local
+    dims = list(range(start, ndim))
+    if len(dims) < 2:
+        # 1D (norm/bias) or single free dim: replicate
+        return P(*spec)
+
+    # pick TP dim: prefer the LAST dim if divisible, else the largest divisible
+    def divisible(i, size):
+        return shape[i] % size == 0 and shape[i] >= size
+
+    tp_dim = None
+    for i in reversed(dims):
+        if divisible(i, msize):
+            tp_dim = i
+            break
+    if tp_dim is None:
+        tp_dim = max(dims, key=lambda i: shape[i])  # pad-shard the largest
+    spec[tp_dim] = pol.model_axis
+
+    if pol.fsdp:
+        for i in dims:
+            if i != tp_dim and divisible(i, dsize):
+                spec[i] = "data"
+                break
+    return P(*spec)
+
+
+def param_pspecs(params_shape: Any, mesh: Mesh, pol: ShardingPolicy, cfg=None):
+    """Map a pytree of ShapeDtypeStructs/arrays -> pytree of PartitionSpec."""
+    pol = pol.with_mesh(mesh)
+
+    def fn(path, leaf):
+        return _spec_for_weight(_path_str(path), tuple(leaf.shape), mesh, pol, cfg)
+
+    return jax.tree_util.tree_map_with_path(fn, params_shape)
+
+
+def state_pspecs(opt_state_shape: Any, param_specs: Any, mesh: Mesh):
+    """Optimizer state mirrors the param sharding (ZeRO-style: moments and
+    master weights inherit the FSDP/TP layout); the step scalar replicates."""
+    from repro.optim.adamw import AdamWState
+
+    master = param_specs if opt_state_shape.master is not None else None
+    return AdamWState(step=P(), mu=param_specs, nu=param_specs, master=master)
+
+
+def batch_pspecs(cfg: ModelConfig, batch_shape: Any, mesh: Mesh, pol: ShardingPolicy):
+    """Batch dict: batch dim over (pod, data); seq/feature dims local."""
+    pol = pol.with_mesh(mesh)
+    daxes = pol.data_axes
+
+    def fn(path, leaf):
+        if leaf.ndim == 0:
+            return P()
+        b = leaf.shape[0]
+        total = 1
+        for a in daxes:
+            total *= _axis_size(mesh, a)
+        if pol.name == "fsdp2d":
+            both = total * _axis_size(mesh, pol.model_axis)
+            if b % both == 0:
+                return P(daxes + (pol.model_axis,))
+        if b % total == 0:
+            return P(daxes) if leaf.ndim >= 1 else P()
+        return P()  # unshardable batch (e.g. batch=1 long-context)
+
+    return jax.tree_util.tree_map_with_path(fn, batch_shape)
+
+
+def decode_state_pspecs(cfg: ModelConfig, state_shape: Any, mesh: Mesh, pol: ShardingPolicy):
+    """KV caches / recurrent states.
+
+    Stacked KV leaves are (L, B, S, Hkv, Dh): batch over (pod,data) when
+    divisible else seq over 'data'; kv-heads over 'model' when divisible
+    else seq over 'model' (sequence-sharded decode)."""
+    pol = pol.with_mesh(mesh)
+    daxes = pol.data_axes
+    dtotal = 1
+    for a in daxes:
+        dtotal *= _axis_size(mesh, a)
+    msize = _axis_size(mesh, pol.model_axis)
+
+    def fn(path, leaf):
+        if leaf.ndim == 0:
+            return P()
+        shape = leaf.shape
+        p = _path_str(path)
+        spec: list[Any] = [None] * leaf.ndim
+        if leaf.ndim >= 4:  # (L, B, S, H, D) or (B, S, H, D) or ssm (L,B,H,P,N)
+            off = 1 if leaf.ndim == 5 else 0
+            bdim, sdim, hdim = off, off + 1, off + 2
+            if "state" in p and leaf.ndim == 5:  # ssm state (L,B,H,P,N)
+                if shape[1] % dtotal == 0:
+                    spec[1] = daxes
+                if shape[2] % msize == 0:
+                    spec[2] = pol.model_axis
+                return P(*spec)
+            if shape[bdim] % dtotal == 0:
+                spec[bdim] = daxes
+            elif shape[sdim] % _axis_size(mesh, "data") == 0:
+                spec[sdim] = "data"
+            if shape[hdim] % msize == 0:
+                spec[hdim] = pol.model_axis
+            elif spec[sdim] is None and shape[sdim] % msize == 0:
+                spec[sdim] = pol.model_axis
+            return P(*spec)
+        if leaf.ndim >= 2:
+            # recurrent/conv states (L,B,W) / (B,W) etc: batch over data, width over model
+            bdim = 1 if leaf.ndim >= 3 and "rem" not in p else 0
+            # find a batch-sized dim heuristically: first dim divisible by dtotal
+            for i in range(leaf.ndim - 1):
+                if shape[i] % dtotal == 0:
+                    spec[i] = daxes
+                    break
+            if shape[-1] % msize == 0:
+                spec[-1] = pol.model_axis
+            return P(*spec)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(fn, state_shape)
+
+
+def to_shardings(spec_tree: Any, mesh: Mesh):
+    """PartitionSpec leaves -> NamedShardings (idempotent on Shardings)."""
+    return jax.tree.map(
+        lambda s: s if isinstance(s, NamedSharding) else NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, (P, NamedSharding)),
+    )

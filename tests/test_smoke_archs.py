@@ -1,0 +1,131 @@
+"""Per-arch smoke tests: reduced config of the same family, one forward +
+one train step on CPU, asserting output shapes + finiteness (no NaNs).
+The FULL configs are exercised only via the dry-run (no allocation)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.models.families import get_family_api
+from repro.optim import adamw_init, adamw_update
+
+jax.config.update("jax_platform_name", "cpu")
+
+LM_ARCHS = [
+    "stablelm-1.6b",
+    "gemma3-12b",
+    "command-r-plus-104b",
+    "starcoder2-3b",
+    "dbrx-132b",
+    "granite-moe-3b-a800m",
+    "mamba2-1.3b",
+    "recurrentgemma-2b",
+    "whisper-small",
+    "internvl2-2b",
+]
+
+
+def _smoke_batch(cfg, b=2, s=16):
+    key = jax.random.PRNGKey(0)
+    toks = jax.random.randint(key, (b, s), 0, cfg.vocab_size)
+    batch = {"tokens": toks, "labels": jnp.roll(toks, -1, axis=1)}
+    if cfg.family == "encdec":
+        batch["enc_embeds"] = jax.random.normal(jax.random.PRNGKey(1), (b, s, cfg.d_model))
+    if cfg.family == "vlm":
+        batch["patch_embeds"] = jax.random.normal(
+            jax.random.PRNGKey(1), (b, cfg.n_patches, cfg.d_model)
+        )
+    return batch
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = get_config(arch, smoke=True)
+    api = get_family_api(cfg)
+    params = api["init"](jax.random.PRNGKey(0), cfg)
+    batch = _smoke_batch(cfg)
+
+    loss, metrics = api["train_loss"](params, cfg, batch)
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss)), f"{arch}: non-finite loss"
+
+    # one full train step (grads + AdamW update), loss stays finite
+    state = adamw_init(params)
+    grads = jax.grad(lambda p: api["train_loss"](p, cfg, batch)[0])(params)
+    for g in jax.tree.leaves(grads):
+        assert bool(jnp.all(jnp.isfinite(g))), f"{arch}: non-finite grad"
+    new_params, state, m = adamw_update(grads, state, params, lr=1e-3)
+    loss2, _ = api["train_loss"](new_params, cfg, batch)
+    assert bool(jnp.isfinite(loss2))
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_smoke_serve_prefill_decode(arch):
+    cfg = get_config(arch, smoke=True)
+    api = get_family_api(cfg)
+    params = api["init"](jax.random.PRNGKey(0), cfg)
+    b, s = 2, 12
+    batch = _smoke_batch(cfg, b, s)
+
+    logits, state = api["prefill"](params, cfg, batch, s_max=s + cfg.n_patches + 8)
+    assert logits.shape == (b, 1, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all()), f"{arch}: non-finite prefill logits"
+
+    tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+    logits2, state2 = api["decode_step"](params, cfg, state, {"token": tok})
+    assert logits2.shape == (b, 1, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits2).all()), f"{arch}: non-finite decode logits"
+    # a second decode step exercises cache_len advance
+    logits3, _ = api["decode_step"](params, cfg, state2, {"token": tok})
+    assert bool(jnp.isfinite(logits3).all())
+
+
+@pytest.mark.parametrize("arch", ["pointnet2-cls", "pointnet2-seg"])
+def test_smoke_pointnet2(arch):
+    from repro.data.pointclouds import sample_batch
+    from repro.models import pointnet2 as PN
+
+    cfg = get_config(arch, smoke=True)
+    params = PN.init_params(jax.random.PRNGKey(0), cfg)
+    pts, cls, seg = sample_batch(jax.random.PRNGKey(1), 2, cfg.n_points)
+    logits = PN.forward(params, cfg, pts)
+    if cfg.task == "cls":
+        assert logits.shape == (2, cfg.n_classes)
+    else:
+        assert logits.shape == (2, cfg.n_points, cfg.n_classes)
+    assert bool(jnp.isfinite(logits).all())
+    labels = cls if cfg.task == "cls" else seg
+    grads = jax.grad(lambda p: PN.loss_fn(p, cfg, pts, labels)[0])(params)
+    assert all(bool(jnp.all(jnp.isfinite(g))) for g in jax.tree.leaves(grads))
+
+
+def test_param_count_analytic_vs_actual():
+    """The ModelConfig.param_count() estimate should track actual init sizes."""
+    from repro.models.nn import count_params
+
+    for arch in ["stablelm-1.6b", "gemma3-12b", "mamba2-1.3b"]:
+        cfg = get_config(arch, smoke=True)
+        api = get_family_api(cfg)
+        params = api["init"](jax.random.PRNGKey(0), cfg)
+        actual = count_params(params)
+        est = cfg.param_count()
+        assert 0.5 < est / actual < 2.0, f"{arch}: est {est} vs actual {actual}"
+
+
+def test_full_config_param_counts():
+    """Full configs roughly match their published sizes (name check)."""
+    expect = {
+        "stablelm-1.6b": 1.6e9,
+        "gemma3-12b": 12e9,
+        "command-r-plus-104b": 104e9,
+        "starcoder2-3b": 3e9,
+        "dbrx-132b": 132e9,
+        "mamba2-1.3b": 1.3e9,
+        "recurrentgemma-2b": 2.7e9,  # w/ untied-equivalent embeddings counted once
+        "internvl2-2b": 2e9,
+    }
+    for arch, target in expect.items():
+        n = get_config(arch).param_count()
+        assert 0.5 < n / target < 2.0, f"{arch}: {n/1e9:.2f}B vs ~{target/1e9:.0f}B"

@@ -1,0 +1,241 @@
+"""Substrate tests: optimizer, checkpointing (atomic/async/elastic), fault
+tolerance (restart/straggler/heartbeat), gradient compression, data streams,
+pipeline parallelism."""
+
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager, load_checkpoint, save_checkpoint
+from repro.checkpoint.store import latest_step
+from repro.data.tokens import Prefetcher, synth_batch, token_stream
+from repro.optim import adamw_init, adamw_update, cosine_warmup_schedule
+from repro.optim.compression import compress_grads, decompress_grads, init_error_feedback
+from repro.runtime import HeartbeatMonitor, StragglerMonitor, run_with_restarts
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+class TestOptimizer:
+    def _quad_setup(self):
+        params = {"w": jnp.array([1.0, -2.0, 3.0]), "b": jnp.array(0.5)}
+        loss = lambda p: jnp.sum(p["w"] ** 2) + p["b"] ** 2
+        return params, loss
+
+    def test_adamw_descends(self):
+        params, loss = self._quad_setup()
+        state = adamw_init(params)
+        l0 = float(loss(params))
+        for _ in range(50):
+            grads = jax.grad(loss)(params)
+            params, state, _ = adamw_update(grads, state, params, lr=0.05)
+        assert float(loss(params)) < l0 * 0.1
+
+    def test_grad_clip_metric(self):
+        params, loss = self._quad_setup()
+        state = adamw_init(params)
+        grads = jax.tree.map(lambda g: g * 1e6, jax.grad(loss)(params))
+        _, _, m = adamw_update(grads, state, params, lr=0.1, max_grad_norm=1.0)
+        assert float(m["grad_norm"]) > 1e5  # pre-clip norm reported
+
+    def test_bf16_master_weights(self):
+        params = {"w": jnp.ones((4,), jnp.bfloat16)}
+        state = adamw_init(params)
+        assert state.master is not None
+        grads = {"w": jnp.full((4,), 1e-3, jnp.bfloat16)}
+        new_params, state, _ = adamw_update(grads, state, params, lr=1e-4)
+        # master accumulates below bf16 resolution
+        assert state.master["w"].dtype == jnp.float32
+        assert new_params["w"].dtype == jnp.bfloat16
+
+    def test_schedule(self):
+        lr0 = float(cosine_warmup_schedule(0, peak_lr=1.0, warmup_steps=10, total_steps=100))
+        lr10 = float(cosine_warmup_schedule(10, peak_lr=1.0, warmup_steps=10, total_steps=100))
+        lr100 = float(cosine_warmup_schedule(100, peak_lr=1.0, warmup_steps=10, total_steps=100))
+        assert lr0 == 0.0 and abs(lr10 - 1.0) < 1e-6 and lr100 < 0.11
+
+
+class TestCheckpoint:
+    def _tree(self, seed=0):
+        k = jax.random.PRNGKey(seed)
+        return {
+            "a": jax.random.normal(k, (8, 4)),
+            "b": {"c": jnp.arange(5, dtype=jnp.int32), "d": jnp.ones((3,), jnp.bfloat16)},
+        }
+
+    def test_roundtrip(self, tmp_path):
+        t = self._tree()
+        save_checkpoint(str(tmp_path), 7, t)
+        out, step, _ = load_checkpoint(str(tmp_path), t)
+        assert step == 7
+        for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(out)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_async_save(self, tmp_path):
+        t = self._tree()
+        th = save_checkpoint(str(tmp_path), 3, t, blocking=False)
+        th.join()
+        assert latest_step(str(tmp_path)) == 3
+
+    def test_atomicity_ignores_incomplete(self, tmp_path):
+        t = self._tree()
+        save_checkpoint(str(tmp_path), 1, t)
+        # fake a crashed save: directory without COMPLETE marker
+        os.makedirs(tmp_path / "step_000000000009")
+        (tmp_path / "step_000000000009" / "data.msgpack.zst").write_bytes(b"junk")
+        assert latest_step(str(tmp_path)) == 1
+
+    def test_elastic_reshard_restore(self, tmp_path):
+        """Save from one 'topology', restore onto explicit new shardings."""
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        t = self._tree()
+        save_checkpoint(str(tmp_path), 2, t)
+        mesh = jax.make_mesh((1, 1), ("data", "model"))
+        sh = jax.tree.map(lambda _: NamedSharding(mesh, P()), t)
+        out, step, _ = load_checkpoint(str(tmp_path), t, shardings=sh)
+        assert step == 2
+        for leaf in jax.tree.leaves(out):
+            assert isinstance(leaf.sharding, NamedSharding)
+
+    def test_manager_gc_and_every(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), keep=2, every=10)
+        t = self._tree()
+        for s in [10, 20, 30]:
+            assert mgr.maybe_save(s, t)
+        assert not mgr.maybe_save(35, t)
+        mgr.wait()
+        mgr._gc()
+        assert latest_step(str(tmp_path)) == 30
+        steps = sorted(n for n in os.listdir(tmp_path) if n.startswith("step_"))
+        assert len(steps) == 2  # keep=2
+
+
+class TestFaultTolerance:
+    def test_restart_resumes_and_completes(self, tmp_path):
+        """Simulated preemption at step 7 of 12: the driver restores from the
+        step-5 checkpoint and the final state matches an uninterrupted run."""
+        mgr = CheckpointManager(str(tmp_path), keep=3, every=5)
+        crashed = {"done": False}
+
+        def make_state():
+            return {"x": jnp.zeros(()), "step": jnp.zeros((), jnp.int32)}
+
+        def loop(state, start, crash_at=None):
+            for step in range(start, 12):
+                state = {"x": state["x"] + 1.0, "step": jnp.int32(step + 1)}
+                mgr.maybe_save(step + 1, state, force=((step + 1) % 5 == 0))
+                mgr.wait()
+                if crash_at is not None and step + 1 == crash_at and not crashed["done"]:
+                    crashed["done"] = True
+                    raise RuntimeError("simulated preemption")
+            return state, 12
+
+        state, last, n_restarts = run_with_restarts(
+            make_state, lambda s, st: loop(s, st, crash_at=7), ckpt_manager=mgr
+        )
+        assert n_restarts == 1
+        assert int(state["step"]) == 12
+        assert float(state["x"]) == 12.0  # exact (data replay is step-keyed)
+
+    def test_straggler_detection(self):
+        mon = StragglerMonitor(threshold=3.0, window=16)
+        for i in range(12):
+            mon.step_start()
+            time.sleep(0.002)
+            mon.step_end(i)
+        mon.step_start()
+        time.sleep(0.05)
+        mon.step_end(99)
+        assert mon.events and mon.events[-1].step == 99
+
+    def test_heartbeat_fires(self):
+        fired = []
+        hb = HeartbeatMonitor(0.05, on_dead=lambda: fired.append(1)).start()
+        time.sleep(0.2)
+        hb.stop()
+        assert fired
+
+    def test_heartbeat_kept_alive(self):
+        fired = []
+        hb = HeartbeatMonitor(0.2, on_dead=lambda: fired.append(1)).start()
+        for _ in range(6):
+            time.sleep(0.05)
+            hb.beat()
+        hb.stop()
+        assert not fired
+
+
+class TestCompression:
+    def test_int8_roundtrip_error_bounded(self):
+        g = {"w": jax.random.normal(jax.random.PRNGKey(0), (128,))}
+        err = init_error_feedback(g)
+        c, err = compress_grads(g, err)
+        out = decompress_grads(c)
+        rel = float(
+            jnp.linalg.norm(out["w"] - g["w"]) / jnp.linalg.norm(g["w"])
+        )
+        assert rel < 0.02  # int8 quantization noise
+        assert c.q["w"].dtype == jnp.int8
+
+    def test_error_feedback_unbiased_over_steps(self):
+        """Accumulated compressed grads converge to accumulated true grads."""
+        key = jax.random.PRNGKey(1)
+        g_true = jax.random.normal(key, (64,)) * 0.1
+        err = init_error_feedback({"w": g_true})
+        acc_c = jnp.zeros_like(g_true)
+        for _ in range(50):
+            c, err = compress_grads({"w": g_true}, err)
+            acc_c = acc_c + decompress_grads(c)["w"]
+        rel = float(jnp.linalg.norm(acc_c / 50 - g_true) / jnp.linalg.norm(g_true))
+        assert rel < 1e-3  # error feedback drives the bias to ~0
+
+
+class TestData:
+    def test_stream_restart_exact(self):
+        a = [b for _, b in zip(range(3), (x[1] for x in token_stream(0, 4, 16, 97)))]
+        b = list(x[1] for x in [next(token_stream(0, 4, 16, 97, start_step=2))])
+        np.testing.assert_array_equal(np.array(a[2]["tokens"]), np.array(b[0]["tokens"]))
+
+    def test_shards_differ(self):
+        b0 = next(token_stream(0, 4, 16, 97, shard_id=0))[1]
+        b1 = next(token_stream(0, 4, 16, 97, shard_id=1))[1]
+        assert not np.array_equal(np.array(b0["tokens"]), np.array(b1["tokens"]))
+
+    def test_prefetcher(self):
+        it = ((i, synth_batch(jax.random.PRNGKey(i), 2, 8, 13)) for i in range(5))
+        out = list(Prefetcher(it, depth=2))
+        assert [i for i, _ in out] == list(range(5))
+
+    def test_labels_shifted(self):
+        b = synth_batch(jax.random.PRNGKey(0), 2, 16, 97)
+        np.testing.assert_array_equal(
+            np.array(b["labels"][:, :-1]), np.array(b["tokens"][:, 1:])
+        )
+
+
+class TestPipeline:
+    def test_pipeline_matches_sequential(self):
+        """GPipe over a 2-stage mesh == running blocks sequentially."""
+        from repro.parallel import pipeline_forward
+
+        if jax.device_count() < 2:
+            pytest.skip("needs >=2 devices (run via dryrun path)")
+        mesh = jax.make_mesh((2,), ("stage",))
+        n_stages, n_micro, mb, d = 2, 4, 8, 16
+        key = jax.random.PRNGKey(0)
+        w = jax.random.normal(key, (n_stages, d, d)) * 0.3
+        x = jax.random.normal(jax.random.PRNGKey(1), (n_micro, mb, d))
+
+        def stage_fn(wp, xx, stage):
+            return jnp.tanh(xx @ wp)
+
+        out = pipeline_forward(mesh, "stage", stage_fn, w, x)
+        ref = x
+        for s in range(n_stages):
+            ref = jnp.tanh(ref @ w[s])
+        np.testing.assert_allclose(np.array(out), np.array(ref), rtol=2e-5, atol=2e-5)
