@@ -60,6 +60,40 @@ def microbench() -> list[dict]:
     return rows
 
 
+def engine_bench(b: int = 8, n: int = 2048) -> list[dict]:
+    """Batched PreprocessEngine vs a per-cloud python loop (same pipeline).
+
+    Rows report us/call; derived = clouds/sec.  The batched engine folds the
+    B clouds' MSP tiles into one kernel grid — one dispatch instead of B.
+    """
+    import functools
+
+    from repro.core.engine import EngineConfig, PreprocessEngine
+    from repro.core.preprocess import preprocess_pc2im
+    from repro.data.pointclouds import sample_batch
+
+    pts, _, _ = sample_batch(jax.random.PRNGKey(0), b, n)
+    engine = PreprocessEngine(
+        EngineConfig(pipeline="pc2im", n_centroids=512, radius=0.3, nsample=16, depth=3)
+    )
+    one = jax.jit(
+        functools.partial(preprocess_pc2im, n_centroids=512, radius=0.3, nsample=16, depth=3)
+    )
+
+    def batched(x):
+        return engine(x).centroid_idx
+
+    def loop(x):
+        return [one(x[i]).centroid_idx for i in range(b)]
+
+    rows = []
+    us_b = _timeit(batched, pts, iters=10)
+    us_l = _timeit(loop, pts, iters=10)
+    rows.append({"name": f"engine/pc2im_b{b}_{n}", "us": us_b, "derived": b / (us_b / 1e6)})
+    rows.append({"name": f"engine/pc2im_loop{b}_{n}", "us": us_l, "derived": b / (us_l / 1e6)})
+    return rows
+
+
 def main() -> None:
     import importlib
 
@@ -85,6 +119,8 @@ def main() -> None:
             print(f"{mod_name},,ERROR {type(e).__name__}: {e}")
     for row in microbench():
         print(f"{row['name']},{row['us']:.1f},")
+    for row in engine_bench():
+        print(f"{row['name']},{row['us']:.1f},{row['derived']:.1f} clouds/s")
 
 
 if __name__ == "__main__":

@@ -2,23 +2,26 @@
 
     PYTHONPATH=src python examples/quickstart.py
 
-Builds procedural point clouds, runs PC2IM preprocessing (median partition ->
-L1 FPS -> lattice query), trains a small PointNet2 classifier for a few
-steps, and prints the preprocessing-energy model numbers."""
+Builds procedural point clouds, runs batched PC2IM preprocessing (median
+partition -> L1 FPS -> lattice query) through the PreprocessEngine, trains a
+small PointNet2 classifier for a few steps, and prints the
+preprocessing-energy model numbers."""
 
 import jax
 
 from repro.configs.base import get_config
 from repro.core import energy as E
-from repro.core.preprocess import preprocess_pc2im
+from repro.core.engine import EngineConfig, PreprocessEngine
 from repro.data.pointclouds import sample_batch
 from repro.models import pointnet2 as PN
 from repro.optim import adamw_init, adamw_update
 
-# --- 1. data + PC2IM preprocessing -----------------------------------------
+# --- 1. data + batched PC2IM preprocessing ----------------------------------
 pts, cls, seg = sample_batch(jax.random.PRNGKey(0), batch=4, n_points=512)
-res = preprocess_pc2im(pts[0], n_centroids=128, radius=0.3, nsample=16, depth=2)
-print(f"sampled {res.centroid_idx.shape[0]} centroids; "
+engine = PreprocessEngine(EngineConfig(
+    pipeline="pc2im", n_centroids=128, radius=0.3, nsample=16, depth=2))
+res = engine(pts)  # all 4 clouds in one launch
+print(f"sampled {res.centroid_idx.shape[0]}x{res.centroid_idx.shape[1]} centroids; "
       f"neighbour fill-rate {float(res.neighbors.mask.mean()):.2f}")
 
 # --- 2. train a small PointNet2 under the PC2IM flow ------------------------

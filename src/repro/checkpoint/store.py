@@ -28,10 +28,35 @@ import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
-import zstandard
+
+try:  # optional fast path; bare envs fall back to stdlib zlib
+    import zstandard
+except ImportError:
+    zstandard = None
+import zlib
 
 FORMAT_VERSION = 1
 _MARKER = "COMPLETE"
+
+_ZSTD_MAGIC = b"\x28\xb5\x2f\xfd"
+
+
+def _compress(payload: bytes) -> bytes:
+    if zstandard is not None:
+        return zstandard.ZstdCompressor(level=3).compress(payload)
+    return zlib.compress(payload, 3)
+
+
+def _decompress(blob: bytes) -> bytes:
+    """Sniff the container magic so either writer's files restore anywhere."""
+    if blob[:4] == _ZSTD_MAGIC:
+        if zstandard is None:
+            raise RuntimeError(
+                "checkpoint is zstd-compressed but zstandard is not installed "
+                "(pip install -r requirements-dev.txt)"
+            )
+        return zstandard.ZstdDecompressor().decompress(blob)
+    return zlib.decompress(blob)
 
 
 def _tree_to_records(tree: Any) -> list:
@@ -86,7 +111,7 @@ def save_checkpoint(
             {"version": FORMAT_VERSION, "step": step, "extra": extra or {}, "leaves": recs},
             use_bin_type=True,
         )
-        comp = zstandard.ZstdCompressor(level=3).compress(payload)
+        comp = _compress(payload)
         final = os.path.join(directory, f"step_{step:012d}")
         tmp = final + f".tmp-{uuid.uuid4().hex[:8]}"
         os.makedirs(tmp, exist_ok=True)
@@ -137,7 +162,7 @@ def load_checkpoint(
             raise FileNotFoundError(f"no complete checkpoint under {directory}")
     path = os.path.join(directory, f"step_{step:012d}", "data.msgpack.zst")
     with open(path, "rb") as f:
-        payload = zstandard.ZstdDecompressor().decompress(f.read())
+        payload = _decompress(f.read())
     obj = msgpack.unpackb(payload, raw=False)
     assert obj["version"] == FORMAT_VERSION
     arrays = _records_to_arrays(obj["leaves"])

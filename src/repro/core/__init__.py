@@ -7,4 +7,5 @@ C4  split-concatenate W16A16 quantized MAC                   -> quant.py, kernel
 C5  delayed aggregation                                      -> grouping.py
 Energy/cycle models for the paper's evaluation figures       -> energy.py
 End-to-end preprocessing pipelines (baseline1/2, pc2im)      -> preprocess.py
+Batched (B, N, 3) PreprocessEngine (batch x tiles -> 1 grid) -> engine.py
 """

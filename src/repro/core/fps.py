@@ -77,19 +77,27 @@ def fps(
     k: int,
     *,
     metric: Metric = "l2",
-    start_idx: int = 0,
+    start_idx: int | None = None,
     valid: jax.Array | None = None,
 ) -> jax.Array:
     """Sequential farthest point sampling.  points: (N, 3) -> indices (k,).
 
-    The first sampled index is `start_idx` (PointNet++ convention: index 0).
+    The first sampled index defaults to the first VALID index — index 0 when
+    no mask is given (PointNet++ convention), else argmax(valid), so a tile
+    whose slot 0 is padding never seeds the sample with a fake point.  Pass
+    `start_idx` to override.
     """
     n = points.shape[0]
     if k > n:
         raise ValueError(f"cannot sample {k} from {n} points")
 
     dmin0 = jnp.full((n,), _BIG, dtype=points.dtype)
-    idx0 = jnp.asarray(start_idx, dtype=jnp.int32)
+    if start_idx is not None:
+        idx0 = jnp.asarray(start_idx, dtype=jnp.int32)
+    elif valid is not None:
+        idx0 = jnp.argmax(valid).astype(jnp.int32)  # first valid slot
+    else:
+        idx0 = jnp.int32(0)
 
     def body(carry, _):
         dmin, last = carry

@@ -111,6 +111,10 @@ def knn(
 
 
 def three_nn_interpolate_weights(dist_sq: jax.Array, eps: float = 1e-8) -> jax.Array:
-    """Inverse-distance weights for 3-NN feature interpolation (FP layer)."""
+    """Inverse-distance weights for 3-NN feature interpolation (FP layer).
+
+    dist_sq: (..., k) — normalised over the trailing k axis, so batched
+    (B, M, k) inputs work unchanged.
+    """
     w = 1.0 / (dist_sq + eps)
-    return w / jnp.sum(w, axis=1, keepdims=True)
+    return w / jnp.sum(w, axis=-1, keepdims=True)

@@ -8,8 +8,10 @@ sc_matmul/  split-concatenate W16A16 integer matmul via 4-bit planes on the
 knn3/       fused 3-nearest-neighbour (3x min-extract) for FP layers.
 lattice/    fused L1-distance + box-mask + first-k neighbour select (C1).
 
-Each kernel: kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd public
-wrapper with interpret switch), ref.py (pure-jnp oracle).  All validated in
-interpret mode on CPU; BlockSpecs are sized for TPU v5e VMEM (16 MB less
-double-buffering headroom) with lane-dim multiples of 128.
+Each kernel: kernel.py (pl.pallas_call + BlockSpec), ops.py (public wrapper),
+ref.py (pure-jnp oracle).  Backend selection, interpret-mode fallback and
+lane padding all go through registry.py — ops register an (xla, pallas) pair
+and call registry.dispatch.  All kernels validate in interpret mode on CPU;
+BlockSpecs are sized for TPU v5e VMEM (16 MB less double-buffering headroom)
+with lane-dim multiples of 128.
 """

@@ -1,8 +1,10 @@
-"""Public op: tiled FPS with kernel/XLA backend selection.
+"""Public op: tiled FPS dispatched through the kernel registry.
 
 `fps_tiles(points_tiled, k)` accepts MSP-layout tiles (T, P, 3) (the
 natural output of core.partition) and handles the TPU-native (T, 3, P)
-transposition + lane padding internally.
+transposition + lane padding internally.  The tile axis is the pallas grid
+axis — callers fold any batch dims into it (the PreprocessEngine folds
+(B, T, P) -> (B·T, P) so B clouds launch as ONE grid).
 """
 
 from __future__ import annotations
@@ -10,8 +12,11 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import registry
 from repro.kernels.fps.kernel import fps_tiles_pallas
 from repro.kernels.fps.ref import fps_tiles_ref
+
+registry.register("fps_tiles", xla=fps_tiles_ref, pallas=fps_tiles_pallas)
 
 
 def fps_tiles(
@@ -29,22 +34,15 @@ def fps_tiles(
     """
     t, p, three = points_tiled.shape
     assert three == 3
-    if backend == "auto":
-        backend = "pallas" if jax.default_backend() == "tpu" else "xla"
-
-    if backend == "xla":
-        return fps_tiles_ref(points_tiled.transpose(0, 2, 1), k, metric=metric)
-
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+    resolved, impl = registry.dispatch("fps_tiles", backend, interpret)
     pts = points_tiled.transpose(0, 2, 1)  # (T, 3, P)
-    pad = (-p) % 128
-    if pad:
-        # pad with copies of the first point: dmin stays 0 there after step 1;
-        # duplicates are never selected before any real point
-        filler = jnp.broadcast_to(pts[:, :, :1], (t, 3, pad))
-        pts = jnp.concatenate([pts, filler], axis=-1)
-    idx = fps_tiles_pallas(pts.astype(jnp.float32), k, metric=metric, interpret=interpret)
+    if resolved == "xla":
+        return impl(pts, k, metric=metric)
+
+    # pad with copies of the first point: dmin stays 0 there after step 1;
+    # duplicates are never selected before any real point
+    pts, pad = registry.pad_to_multiple(pts, axis=-1, multiple=registry.LANE)
+    idx = impl(pts.astype(jnp.float32), k, metric=metric)
     if pad:
         idx = jnp.minimum(idx, p - 1)  # paranoia: padded lanes can't win, but clamp
     return idx

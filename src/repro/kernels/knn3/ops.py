@@ -1,12 +1,15 @@
-"""Public op: fused kNN with backend selection + lane padding."""
+"""Public op: fused kNN dispatched through the kernel registry."""
 
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import registry
 from repro.kernels.knn3.kernel import knn3_pallas
 from repro.kernels.knn3.ref import knn3_ref
+
+registry.register("knn3", xla=knn3_ref, pallas=knn3_pallas)
 
 
 def knn3(
@@ -19,32 +22,22 @@ def knn3(
     interpret: bool | None = None,
 ):
     """queries: (Q, 3), points: (P, 3) -> (idx (Q,k), dist (Q,k))."""
-    if backend == "auto":
-        backend = "pallas" if jax.default_backend() == "tpu" else "xla"
+    resolved, impl = registry.dispatch("knn3", backend, interpret)
     pts_t = points.T  # (3, P)
-    if backend == "xla":
-        return knn3_ref(queries, pts_t, k=k, metric=metric)
+    if resolved == "xla":
+        return impl(queries, pts_t, k=k, metric=metric)
 
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
-    q, p = queries.shape[0], points.shape[0]
-    pad_p = (-p) % 128
-    if pad_p:
-        # +inf-coordinate padding can NaN the distance math; instead pad with a
-        # huge-but-finite offset of the first point so padded cols never win.
-        filler = pts_t[:, :1] + 1e15
-        pts_t = jnp.concatenate([pts_t, jnp.broadcast_to(filler, (3, pad_p))], axis=1)
+    q = queries.shape[0]
+    # huge-but-finite offset padding: +inf coordinates would NaN the distance
+    # math, the FAR_OFFSET filler just never wins
+    pts_t, _ = registry.pad_to_multiple(
+        pts_t, axis=1, multiple=registry.LANE, offset=registry.FAR_OFFSET
+    )
     bq = 256
-    pad_q = (-q) % min(bq, max(q, 8))
     if q < bq:
-        bq = q + ((-q) % 8 if q % 8 else 0) or q
-    pad_q = (-q) % bq
-    if pad_q:
-        queries = jnp.concatenate(
-            [queries, jnp.broadcast_to(queries[:1], (pad_q, 3))], axis=0
-        )
-    idx, dist = knn3_pallas(
-        queries.astype(jnp.float32), pts_t.astype(jnp.float32),
-        k=k, metric=metric, bq=bq, interpret=interpret,
+        bq = q + ((-q) % registry.SUBLANE if q % registry.SUBLANE else 0) or q
+    queries, _ = registry.pad_to_multiple(queries, axis=0, multiple=bq)
+    idx, dist = impl(
+        queries.astype(jnp.float32), pts_t.astype(jnp.float32), k=k, metric=metric, bq=bq
     )
     return idx[:q], dist[:q]

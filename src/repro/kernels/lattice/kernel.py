@@ -45,6 +45,53 @@ def _lattice_kernel(c_ref, p_ref, idx_ref, mask_ref, *, nsample: int, l_range: f
 
 
 @functools.partial(
+    jax.jit, static_argnames=("nsample", "l_range", "interpret")
+)
+def lattice_tiles_pallas(
+    centroids: jax.Array,
+    points: jax.Array,
+    *,
+    nsample: int,
+    l_range: float,
+    interpret: bool = False,
+):
+    """Per-tile lattice query in ONE grid: each program queries one tile's
+    centroids against that tile's own points (the MSP-local dataflow).
+
+    centroids (T, K, 3), points (T, 3, P) -> idx (T, K, nsample) int32,
+    mask (T, K, nsample) bool.  The tile axis is the pallas grid — the
+    PreprocessEngine folds (batch x MSP-tiles) into T, so B clouds run as a
+    single launch.  `None` block dims squeeze the tile axis, so the body is
+    the exact same `_lattice_kernel` as the flat variant below.
+    """
+    t, kk, three = centroids.shape
+    assert three == 3 and points.shape[0] == t and points.shape[1] == 3
+    p = points.shape[2]
+    if p % 128 != 0:
+        raise ValueError(f"P={p} must be a multiple of 128")
+
+    kernel = functools.partial(_lattice_kernel, nsample=nsample, l_range=l_range)
+    return pl.pallas_call(
+        kernel,
+        grid=(t,),
+        in_specs=[
+            pl.BlockSpec((None, kk, 3), lambda i: (i, 0, 0)),
+            pl.BlockSpec((None, 3, p), lambda i: (i, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, kk, nsample), lambda i: (i, 0, 0)),
+            pl.BlockSpec((None, kk, nsample), lambda i: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((t, kk, nsample), jnp.int32),
+            jax.ShapeDtypeStruct((t, kk, nsample), jnp.bool_),
+        ],
+        interpret=interpret,
+        name="pc2im_lattice_tiles",
+    )(centroids, points)
+
+
+@functools.partial(
     jax.jit, static_argnames=("nsample", "l_range", "bc", "interpret")
 )
 def lattice_pallas(

@@ -1,13 +1,23 @@
-"""Public op: fused lattice query with backend selection."""
+"""Public ops: fused lattice query (flat + per-tile) via the kernel registry."""
 
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.query import LATTICE_RANGE_FACTOR, NeighborSet
-from repro.kernels.lattice.kernel import lattice_pallas
+from repro.core.query import LATTICE_RANGE_FACTOR, NeighborSet, lattice_query
+from repro.kernels import registry
+from repro.kernels.lattice.kernel import lattice_pallas, lattice_tiles_pallas
 from repro.kernels.lattice.ref import lattice_ref
+
+registry.register("lattice_query", xla=lattice_ref, pallas=lattice_pallas)
+registry.register(
+    "lattice_query_tiles",
+    xla=lambda coords, cxyz, *, nsample, l_range: jax.vmap(
+        lambda c, cx: lattice_query(c, cx, l_range, nsample, range_factor=1.0)
+    )(coords, cxyz),
+    pallas=lattice_tiles_pallas,
+)
 
 
 def lattice_query_fused(
@@ -22,30 +32,59 @@ def lattice_query_fused(
 ) -> NeighborSet:
     """Drop-in fused version of core.query.lattice_query (same signature order)."""
     l_range = float(radius * range_factor)
-    if backend == "auto":
-        backend = "pallas" if jax.default_backend() == "tpu" else "xla"
+    resolved, impl = registry.dispatch("lattice_query", backend, interpret)
     pts_t = points.T
-    if backend == "xla":
-        idx, mask = lattice_ref(centroids, pts_t, nsample=nsample, l_range=l_range)
+    if resolved == "xla":
+        idx, mask = impl(centroids, pts_t, nsample=nsample, l_range=l_range)
         return NeighborSet(idx=idx, mask=mask)
 
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
-    m, p = centroids.shape[0], points.shape[0]
-    pad_p = (-p) % 128
-    if pad_p:
-        filler = pts_t[:, :1] + 1e15  # finite, out of any lattice range
-        pts_t = jnp.concatenate([pts_t, jnp.broadcast_to(filler, (3, pad_p))], axis=1)
+    m = centroids.shape[0]
+    pts_t, _ = registry.pad_to_multiple(
+        pts_t, axis=1, multiple=registry.LANE, offset=registry.FAR_OFFSET
+    )
     bc = 128 if m % 128 == 0 else (m if m <= 128 else None)
-    pad_m = 0
     if bc is None:
         bc = 128
-        pad_m = (-m) % bc
-        centroids = jnp.concatenate(
-            [centroids, jnp.broadcast_to(centroids[:1] + 1e15, (pad_m, 3))], axis=0
+        centroids, _ = registry.pad_to_multiple(
+            centroids, axis=0, multiple=bc, offset=registry.FAR_OFFSET
         )
-    idx, mask = lattice_pallas(
+    idx, mask = impl(
         centroids.astype(jnp.float32), pts_t.astype(jnp.float32),
-        nsample=nsample, l_range=l_range, bc=bc, interpret=interpret,
+        nsample=nsample, l_range=l_range, bc=bc,
     )
     return NeighborSet(idx=idx[:m], mask=mask[:m])
+
+
+def lattice_query_tiles(
+    coords: jax.Array,
+    centroids: jax.Array,
+    radius: float,
+    nsample: int,
+    *,
+    range_factor: float = LATTICE_RANGE_FACTOR,
+    backend: str = "auto",
+    interpret: bool | None = None,
+) -> NeighborSet:
+    """Per-tile lattice query: each tile's centroids against its own points.
+
+    coords (T, P, 3), centroids (T, K, 3) -> NeighborSet with idx/mask
+    (T, K, nsample), indices LOCAL to each tile.  One pallas grid covers all
+    T tiles — the PreprocessEngine folds (B, tiles) into T for one launch.
+    """
+    t, p, three = coords.shape
+    assert three == 3 and centroids.shape[0] == t
+    l_range = float(radius * range_factor)
+    resolved, impl = registry.dispatch("lattice_query_tiles", backend, interpret)
+    if resolved == "xla":
+        idx, mask = impl(coords, centroids, nsample=nsample, l_range=l_range)
+        return NeighborSet(idx=idx, mask=mask)
+
+    pts_t = coords.transpose(0, 2, 1)  # (T, 3, P)
+    pts_t, _ = registry.pad_to_multiple(
+        pts_t, axis=2, multiple=registry.LANE, offset=registry.FAR_OFFSET
+    )
+    idx, mask = impl(
+        centroids.astype(jnp.float32), pts_t.astype(jnp.float32),
+        nsample=nsample, l_range=l_range,
+    )
+    return NeighborSet(idx=idx, mask=mask)

@@ -1,0 +1,146 @@
+"""Unified kernel-backend registry — one place for dispatch, fallback, padding.
+
+Every public op under kernels/ used to carry its own copy of the same three
+concerns:
+
+  1. backend resolution   — "auto" means pallas on TPU, the XLA reference
+                            everywhere else;
+  2. interpret fallback   — pallas kernels run in interpret mode on non-TPU
+                            hosts so the whole suite is testable on CPU;
+  3. lane/sublane padding — TPU lane width is 128; inputs are padded with
+                            copies of the first slice (optionally pushed far
+                            out of range) so padded lanes can never win a
+                            distance comparison.
+
+This module centralises all three.  Kernels self-register an (xla, pallas)
+implementation pair under a name; ops call `dispatch(name, backend=...,
+interpret=...)` and get back the resolved callable.  The registry is also the
+natural seam for future backends (e.g. a CUDA path) and for forcing a global
+backend in tests via `force_backend`.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import functools
+import threading
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+LANE = 128  # TPU lane width: last-dim block multiples
+SUBLANE = 8  # f32 sublane multiple (second-to-last dim)
+
+#: padding offset that pushes filler points out of every distance range while
+#: staying finite (inf would NaN the |a-b| math inside the kernels).
+FAR_OFFSET = 1e15
+
+_BACKENDS = ("pallas", "xla")
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelSpec:
+    """One registered kernel: a Pallas implementation + its XLA oracle."""
+
+    name: str
+    xla: Callable
+    pallas: Callable
+
+
+_REGISTRY: dict[str, KernelSpec] = {}
+_LOCAL = threading.local()
+
+
+def register(name: str, *, xla: Callable, pallas: Callable) -> KernelSpec:
+    """Register (or replace) a kernel implementation pair under `name`."""
+    spec = KernelSpec(name=name, xla=xla, pallas=pallas)
+    _REGISTRY[name] = spec
+    return spec
+
+
+def get(name: str) -> KernelSpec:
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown kernel {name!r}; registered: {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def names() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+@contextlib.contextmanager
+def force_backend(backend: str | None):
+    """Override every "auto" resolution inside the context (None = no-op).
+
+    Resolution happens at TRACE time: a jitted function (or cached
+    PreprocessEngine) that already traced with some backend will replay its
+    cache and never consult the override.  Use this around first-trace code
+    paths (fresh shapes / fresh engines); to pin a backend durably, pass it
+    explicitly (EngineConfig(backend=...) participates in engine identity).
+    """
+    prev = getattr(_LOCAL, "forced", None)
+    _LOCAL.forced = backend
+    try:
+        yield
+    finally:
+        _LOCAL.forced = prev
+
+
+def resolve_backend(
+    backend: str = "auto", interpret: bool | None = None
+) -> tuple[str, bool]:
+    """Resolve ("auto" | "pallas" | "xla", interpret?) -> (backend, interpret).
+
+    "auto" picks pallas on TPU and the XLA reference elsewhere; interpret
+    defaults to True off-TPU so pallas kernels remain runnable on CPU.
+    """
+    forced = getattr(_LOCAL, "forced", None)
+    if backend == "auto" and forced is not None:
+        backend = forced
+    on_tpu = jax.default_backend() == "tpu"
+    if backend == "auto":
+        backend = "pallas" if on_tpu else "xla"
+    if backend not in _BACKENDS:
+        raise ValueError(f"backend must be one of {('auto',) + _BACKENDS}, got {backend!r}")
+    if interpret is None:
+        interpret = not on_tpu
+    return backend, interpret
+
+
+def dispatch(
+    name: str, backend: str = "auto", interpret: bool | None = None
+) -> tuple[str, Callable]:
+    """Resolve the backend and return (backend, impl).
+
+    The pallas impl is returned partially applied with the resolved interpret
+    flag; the xla impl is returned as-is (it has no interpret concept).
+    """
+    backend, interpret = resolve_backend(backend, interpret)
+    spec = get(name)
+    if backend == "xla":
+        return backend, spec.xla
+    return backend, functools.partial(spec.pallas, interpret=interpret)
+
+
+def pad_to_multiple(
+    x: jax.Array, axis: int, multiple: int = LANE, *, offset: float = 0.0
+) -> tuple[jax.Array, int]:
+    """Pad `axis` of x up to a multiple by repeating the first slice.
+
+    offset=0.0 replicates the first slice exactly (FPS-style padding: the
+    duplicate's dmin collapses to 0 after step one, so it can never be
+    sampled before any real point).  offset=FAR_OFFSET pushes the filler out
+    of every query range (query-style padding).  Returns (padded, pad_count).
+    """
+    n = x.shape[axis]
+    pad = (-n) % multiple
+    if pad == 0:
+        return x, 0
+    sl = [slice(None)] * x.ndim
+    sl[axis] = slice(0, 1)
+    filler = x[tuple(sl)] + jnp.asarray(offset, x.dtype)
+    shape = list(x.shape)
+    shape[axis] = pad
+    return jnp.concatenate([x, jnp.broadcast_to(filler, shape)], axis=axis), pad

@@ -2,7 +2,8 @@
 
 `sc_quantized_linear` is the `quant_mode="sc_w16a16"` path exposed to every
 architecture's MLP/projection layers (DESIGN §Arch-applicability): float in,
-float out, SC-CIM integer GEMM inside.
+float out, SC-CIM integer GEMM inside.  Backend selection goes through the
+kernel registry like every other kernel.
 """
 
 from __future__ import annotations
@@ -11,8 +12,17 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.quant import quantize_symmetric
+from repro.kernels import registry
 from repro.kernels.sc_matmul.kernel import sc_matmul_pallas
 from repro.kernels.sc_matmul.ref import sc_matmul_ref
+
+registry.register(
+    "sc_matmul",
+    xla=lambda x, w, *, n_planes: sc_matmul_ref(x, w, n_planes=n_planes),
+    pallas=lambda x, w, *, n_planes, interpret: sc_matmul_pallas(
+        x, w, n_planes_x=n_planes, n_planes_w=n_planes, interpret=interpret
+    ),
+)
 
 
 def sc_matmul_op(
@@ -25,15 +35,8 @@ def sc_matmul_op(
 ) -> jax.Array:
     """Exact integer matmul via SC planes.  (M,K) x (K,N) int32 -> (M,N) f32."""
     n_planes = bits // 4
-    if backend == "auto":
-        backend = "pallas" if jax.default_backend() == "tpu" else "xla"
-    if backend == "xla":
-        return sc_matmul_ref(x_q, w_q, n_planes=n_planes)
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
-    return sc_matmul_pallas(
-        x_q, w_q, n_planes_x=n_planes, n_planes_w=n_planes, interpret=interpret
-    )
+    _, impl = registry.dispatch("sc_matmul", backend, interpret)
+    return impl(x_q, w_q, n_planes=n_planes)
 
 
 def sc_quantized_linear(

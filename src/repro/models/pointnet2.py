@@ -25,8 +25,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import grouping as G
-from repro.core import preprocess as PP
 from repro.core import query as Q
+from repro.core.engine import EngineConfig, clamp_depth, get_engine
 from repro.models import nn
 
 
@@ -56,6 +56,7 @@ class PointNet2Config:
     aggregation: Literal["standard", "delayed"] = "delayed"
     quant: Literal["none", "sc_w16a16", "sc_w8a8"] = "none"
     msp_depth: int = 2  # MSP tiles = 2^depth (pc2im preproc)
+    preproc_backend: str = "auto"  # kernel registry backend for preprocessing
 
     @property
     def family(self) -> str:
@@ -90,44 +91,64 @@ def init_params(key, cfg: PointNet2Config):
     return params
 
 
-def _run_preproc(cfg: PointNet2Config, sa: SAConfig, xyz: jax.Array) -> PP.PreprocessResult:
+def _stage_engine(cfg: PointNet2Config, sa: SAConfig, n_points: int):
+    """Batched PreprocessEngine for one SA stage (cached per distinct config)."""
     if cfg.preproc == "pc2im":
-        n = xyz.shape[0]
-        depth = cfg.msp_depth
-        # keep tiles no smaller than 4x the per-tile sample count
-        while depth > 0 and (n >> depth) < 4 * max(1, sa.n_centroids >> depth):
-            depth -= 1
-        while depth > 0 and (n % (1 << depth) or sa.n_centroids % (1 << depth)):
-            depth -= 1
-        return PP.preprocess_pc2im(xyz, sa.n_centroids, sa.radius, sa.nsample, depth=depth)
-    if cfg.preproc == "baseline2":
-        return PP.preprocess_baseline2(xyz, sa.n_centroids, sa.radius, sa.nsample)
-    return PP.preprocess_baseline1(xyz, sa.n_centroids, sa.radius, sa.nsample)
+        ec = EngineConfig(
+            pipeline="pc2im",
+            n_centroids=sa.n_centroids,
+            radius=sa.radius,
+            nsample=sa.nsample,
+            depth=clamp_depth(n_points, sa.n_centroids, cfg.msp_depth),
+            backend=cfg.preproc_backend,
+        )
+    else:
+        ec = EngineConfig(
+            pipeline=cfg.preproc,
+            n_centroids=sa.n_centroids,
+            radius=sa.radius,
+            nsample=sa.nsample,
+            backend=cfg.preproc_backend,
+        )
+    return get_engine(ec)
 
 
 def _sa_stage(cfg, sa_cfg, mlp_params, xyz, feats):
-    """One set-abstraction stage on a single cloud.  Returns (new_xyz, new_feats)."""
-    res = _run_preproc(cfg, sa_cfg, xyz)
+    """One BATCHED set-abstraction stage.  xyz (B, N, 3), feats (B, N, C)|None.
+
+    Preprocessing runs through the PreprocessEngine (batch and MSP tiles fold
+    into one kernel grid); the per-point MLP applies batch-wide (it is
+    leading-dim agnostic); only the index gathers vmap over clouds.
+    """
+    res = _stage_engine(cfg, sa_cfg, xyz.shape[1])(xyz)
     nbrs = res.neighbors
     if cfg.aggregation == "delayed":
         # C5: per-POINT mlp on [abs-xyz, feats], then gather + masked maxpool
         x = xyz if feats is None else jnp.concatenate([xyz, feats], axis=-1)
-        new_feats = G.aggregate_delayed(x, nbrs, lambda v: nn.mlp_apply(mlp_params, v))
+        pointwise = nn.mlp_apply(mlp_params, x)  # (B, N, C')
+        grouped = jax.vmap(G.group_features)(pointwise, nbrs)  # (B, M, S, C')
+        new_feats = G.masked_maxpool(grouped, nbrs.mask)
     else:
-        rel = G.group_relative_coords(xyz, res.centroid_xyz, nbrs)  # (M,S,3)
+        rel = jax.vmap(G.group_relative_coords)(xyz, res.centroid_xyz, nbrs)
         if feats is None:
             grouped = rel
         else:
-            gf = G.group_features(feats, nbrs)  # (M,S,C)
+            gf = jax.vmap(G.group_features)(feats, nbrs)  # (B, M, S, C)
             grouped = jnp.concatenate([rel, gf], axis=-1)
         new_feats = G.masked_maxpool(nn.mlp_apply(mlp_params, grouped), nbrs.mask)
     return res.centroid_xyz, new_feats
 
 
-def _forward_single(params, cfg: PointNet2Config, points: jax.Array):
-    """points: (N, 3 + in_features) -> logits (cls: (C,), seg: (N, C))."""
-    xyz = points[:, :3]
-    feats = points[:, 3:] if cfg.in_features else None
+def forward(params, cfg: PointNet2Config, points: jax.Array) -> jax.Array:
+    """Batched forward.  points: (B, N, 3+F) -> (B, C) or (B, N, C)."""
+    with nn.quant_mode(cfg.quant):
+        return _forward_batched(params, cfg, points)
+
+
+def _forward_batched(params, cfg: PointNet2Config, points: jax.Array):
+    """points: (B, N, 3 + in_features) -> logits (cls: (B,C), seg: (B,N,C))."""
+    xyz = points[..., :3]
+    feats = points[..., 3:] if cfg.in_features else None
 
     levels = [(xyz, feats)]
     for sa_cfg, mlp_p in zip(cfg.sa, params["sa"]):
@@ -136,9 +157,9 @@ def _forward_single(params, cfg: PointNet2Config, points: jax.Array):
 
     if cfg.task == "cls":
         xyz_l, feats_l = levels[-1]
-        x = jnp.concatenate([xyz_l, feats_l], axis=-1)
-        x = nn.mlp_apply(params["global"], x)  # (M, C)
-        x = jnp.max(x, axis=0)  # global max pool
+        x = jnp.concatenate([xyz_l, feats_l], axis=-1)  # (B, M, C)
+        x = nn.mlp_apply(params["global"], x)
+        x = jnp.max(x, axis=1)  # global max pool per cloud
         return nn.mlp_apply(params["head"], x, final_act=False)
 
     # segmentation: FP stages walk the pyramid back from coarse to fine.
@@ -148,9 +169,9 @@ def _forward_single(params, cfg: PointNet2Config, points: jax.Array):
     n_fp = len(params["fp"])
     for i, fp_p in enumerate(params["fp"]):
         fine_xyz, fine_f = levels[n_fp - 1 - i]
-        idx, dist = Q.knn(fine_xyz, coarse_xyz, 3)
+        idx, dist = jax.vmap(lambda q, r: Q.knn(q, r, 3))(fine_xyz, coarse_xyz)
         w = Q.three_nn_interpolate_weights(dist)
-        interp = G.interpolate_features(coarse_f, idx, w)  # (Nf, Cc)
+        interp = jax.vmap(G.interpolate_features)(coarse_f, idx, w)  # (B, Nf, Cc)
         if i == n_fp - 1:  # finest level: raw inputs as skip
             skip = fine_xyz if fine_f is None else jnp.concatenate([fine_xyz, fine_f], -1)
         else:
@@ -159,12 +180,6 @@ def _forward_single(params, cfg: PointNet2Config, points: jax.Array):
         coarse_f = nn.mlp_apply(fp_p, x)
         coarse_xyz = fine_xyz
     return nn.mlp_apply(params["head"], coarse_f, final_act=False)
-
-
-def forward(params, cfg: PointNet2Config, points: jax.Array) -> jax.Array:
-    """Batched forward.  points: (B, N, 3+F) -> (B, C) or (B, N, C)."""
-    with nn.quant_mode(cfg.quant):
-        return jax.vmap(lambda p: _forward_single(params, cfg, p))(points)
 
 
 def loss_fn(params, cfg: PointNet2Config, points: jax.Array, labels: jax.Array):

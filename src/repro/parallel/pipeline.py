@@ -18,7 +18,7 @@ from typing import Callable
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
+from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
 
@@ -82,6 +82,6 @@ def pipeline_forward(
         mesh=mesh,
         in_specs=(pspec_params, P()),
         out_specs=P(),
-        check_vma=False,
+        check_rep=False,
     )
     return fn(params_stacked, x)

@@ -1,1 +1,5 @@
+from repro.serve.pointcloud import (  # noqa: F401
+    PointCloudServeConfig,
+    make_pointcloud_serve_fns,
+)
 from repro.serve.step import make_serve_fns  # noqa: F401

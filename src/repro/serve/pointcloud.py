@@ -1,0 +1,97 @@
+"""Batched point-cloud inference — ragged requests onto static engine shapes.
+
+Serving traffic arrives as clouds of arbitrary size in arbitrary batches;
+the PreprocessEngine (and everything jitted behind it) wants a fixed
+(B, N, 3+F).  This module is the adapter:
+
+  * clouds smaller than cfg.n_points are padded by repeating the last point
+    (duplicates collapse to one FPS candidate, the standard convention);
+  * clouds larger than cfg.n_points are deterministically strided down —
+    the paper's pipelines all assume a fixed-budget input stage;
+  * partial batches are zero-padded to `batch_size` and the filler rows
+    dropped from the output.
+
+One jit-compiled `infer` artifact serves every request shape.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import pointnet2 as PN
+
+
+@dataclasses.dataclass(frozen=True)
+class PointCloudServeConfig:
+    batch_size: int = 8  # static serving batch (pad + drop filler rows)
+
+
+def pad_cloud(points: np.ndarray, n_points: int) -> tuple[np.ndarray, int]:
+    """Fit one (n, F>=3) cloud to exactly n_points rows.
+
+    Returns (fitted cloud, n) with the ORIGINAL row count, so callers can
+    recover which rows are real (n < n_points: the first n) or reverse the
+    deterministic stride subsample (n > n_points: see subsample_indices).
+    """
+    n = points.shape[0]
+    if n == n_points:
+        return points, n
+    if n > n_points:  # deterministic stride subsample (fixed input budget)
+        return points[subsample_indices(n, n_points)], n
+    filler = np.broadcast_to(points[-1:], (n_points - n, points.shape[1]))
+    return np.concatenate([points, filler], axis=0), n
+
+
+def subsample_indices(n: int, n_points: int) -> np.ndarray:
+    """The stride-subsample used by pad_cloud for oversized clouds: which of
+    the n input rows survive.  Exposed so seg callers can map logits back."""
+    return np.linspace(0, n - 1, n_points).round().astype(np.int64)
+
+
+def make_pointcloud_serve_fns(
+    cfg: PN.PointNet2Config, serve_cfg: PointCloudServeConfig | None = None
+):
+    """Serving closures for a PointNet2 config.
+
+    Returns {"infer", "serve_batch"}:
+      infer(params, points)       — jitted batched step on the static
+                                    (batch_size, n_points, 3+F) shape.
+      serve_batch(params, clouds) — ragged entry point: list of (n_i, 3+F)
+                                    numpy clouds -> list of per-cloud logits
+                                    (cls: (C,); seg: (n_i, C) — padding rows
+                                    dropped, and oversized clouds mapped back
+                                    to all n_i points via nearest sampled
+                                    point, so row j scores input point j).
+    """
+    scfg = serve_cfg or PointCloudServeConfig()
+    b, n = scfg.batch_size, cfg.n_points
+    width = 3 + cfg.in_features
+
+    @jax.jit
+    def infer(params, points: jax.Array) -> jax.Array:
+        return PN.forward(params, cfg, points)
+
+    def serve_batch(params, clouds: list[np.ndarray]) -> list[np.ndarray]:
+        out: list[np.ndarray] = []
+        for lo in range(0, len(clouds), b):
+            chunk = clouds[lo : lo + b]
+            fitted = [pad_cloud(np.asarray(c, np.float32), n) for c in chunk]
+            batch = np.zeros((b, n, width), np.float32)
+            for i, (pts, _) in enumerate(fitted):
+                batch[i] = pts
+            logits = np.asarray(infer(params, jnp.asarray(batch)))
+            for i, (_, n_orig) in enumerate(fitted):
+                if cfg.task != "seg":
+                    out.append(logits[i])
+                elif n_orig <= n:  # drop padding rows
+                    out.append(logits[i, :n_orig])
+                else:  # subsampled: nearest sampled point scores each input row
+                    inv = np.round(np.linspace(0, n - 1, n_orig)).astype(np.int64)
+                    out.append(logits[i, inv])
+        return out
+
+    return {"infer": infer, "serve_batch": serve_batch}

@@ -4,9 +4,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
-from jax import enable_x64
+from _hypothesis import given, settings, st
+from jax.experimental import enable_x64
 
 from repro.core import quant as QT
 

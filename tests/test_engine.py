@@ -1,0 +1,237 @@
+"""PreprocessEngine: batched-vs-per-cloud equivalence, registry dispatch,
+grid-partition edge cases, and the FPS empty-slot-0 seeding regression."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import fps as F
+from repro.core import partition as P
+from repro.core import preprocess as PP
+from repro.core.engine import EngineConfig, PreprocessEngine, clamp_depth, get_engine
+from repro.kernels import registry
+
+jax.config.update("jax_platform_name", "cpu")
+
+BACKENDS = [("xla", None), ("pallas", True)]  # (backend, interpret)
+
+
+def _clouds(b, n, seed=0):
+    return jax.random.uniform(
+        jax.random.PRNGKey(seed), (b, n, 3), minval=-1.0, maxval=1.0
+    )
+
+
+def _assert_results_equal(got, ref):
+    for g, r, name in zip(
+        jax.tree.leaves(got), jax.tree.leaves(ref), ("cidx", "cxyz", "nidx", "nmask", "cvalid")
+    ):
+        np.testing.assert_array_equal(np.array(g), np.array(r), err_msg=name)
+
+
+class TestEngineEquivalence:
+    """Acceptance: engine(B clouds) == stack([preprocess_*(c) for c in clouds])
+    bitwise, for all three pipelines, on both backends."""
+
+    @pytest.mark.parametrize("backend,interpret", BACKENDS)
+    @pytest.mark.parametrize("pipeline", ["baseline1", "baseline2", "pc2im"])
+    def test_batched_matches_per_cloud_loop(self, pipeline, backend, interpret):
+        pts = _clouds(3, 256, seed=hash(pipeline) % 100)
+        # depth/grid match the per-cloud pipeline defaults (pc2im: depth=3)
+        eng = PreprocessEngine(EngineConfig(
+            pipeline=pipeline, n_centroids=32, radius=0.4, nsample=8, depth=3,
+            backend=backend, interpret=interpret,
+        ))
+        got = eng(pts)
+        per_cloud = [PP.PIPELINES[pipeline](pts[b], 32, 0.4, 8) for b in range(3)]
+        ref = jax.tree.map(lambda *xs: jnp.stack(xs), *per_cloud)
+        _assert_results_equal(got, ref)
+
+    @pytest.mark.parametrize("backend,interpret", BACKENDS)
+    def test_pc2im_depth3_larger_cloud(self, backend, interpret):
+        pts = _clouds(2, 1024, seed=7)
+        eng = PreprocessEngine(EngineConfig(
+            pipeline="pc2im", n_centroids=128, radius=0.3, nsample=16, depth=3,
+            backend=backend, interpret=interpret,
+        ))
+        got = eng(pts)
+        ref = jax.tree.map(
+            lambda *xs: jnp.stack(xs),
+            *[PP.preprocess_pc2im(pts[b], 128, 0.3, 16, depth=3) for b in range(2)],
+        )
+        _assert_results_equal(got, ref)
+
+    def test_single_cloud_promotes(self):
+        pts = _clouds(1, 256, seed=3)[0]
+        eng = PreprocessEngine(EngineConfig(
+            pipeline="pc2im", n_centroids=32, radius=0.4, nsample=8, depth=2))
+        got = eng(pts)
+        ref = PP.preprocess_pc2im(pts, 32, 0.4, 8, depth=2)
+        assert got.centroid_idx.shape == (32,)
+        _assert_results_equal(got, ref)
+
+    def test_engine_is_jit_stable_across_batch_sizes(self):
+        eng = PreprocessEngine(EngineConfig(
+            pipeline="pc2im", n_centroids=16, radius=0.4, nsample=4, depth=1))
+        for b in (1, 2, 5):
+            res = eng(_clouds(b, 64, seed=b))
+            assert res.centroid_idx.shape == (b, 16)
+            assert res.neighbors.idx.shape == (b, 16, 4)
+
+    def test_mixed_query_override_matches_tiled_ball(self):
+        """MSP tiles + ball query (ablation config) == per-cloud _tiled_common."""
+        pts = _clouds(2, 256, seed=11)
+        eng = PreprocessEngine(EngineConfig(
+            pipeline="pc2im", n_centroids=32, radius=0.4, nsample=8, depth=2,
+            metric="l2", query="ball",
+        ))
+        got = eng(pts)
+
+        def one(p):
+            part = P.median_partition(p, 2)
+            return PP._tiled_common(p, part, 32, 0.4, 8, "l2", "ball")
+
+        ref = jax.tree.map(lambda *xs: jnp.stack(xs), *[one(pts[b]) for b in range(2)])
+        _assert_results_equal(got, ref)
+
+
+class TestEngineValidation:
+    def test_bad_pipeline_raises(self):
+        with pytest.raises(ValueError):
+            PreprocessEngine(EngineConfig(pipeline="nope"))
+
+    def test_indivisible_centroids_raises(self):
+        with pytest.raises(ValueError, match="divisible"):
+            PreprocessEngine(EngineConfig(pipeline="pc2im", n_centroids=30, depth=2))
+
+    def test_indivisible_points_raises(self):
+        eng = PreprocessEngine(EngineConfig(pipeline="pc2im", n_centroids=32, depth=2))
+        with pytest.raises(ValueError, match="divisible"):
+            eng(_clouds(2, 250))
+
+    def test_bad_rank_raises(self):
+        eng = PreprocessEngine(EngineConfig(pipeline="baseline1", n_centroids=8))
+        with pytest.raises(ValueError):
+            eng(jnp.zeros((4, 64, 2)))
+
+    def test_clamp_depth(self):
+        assert clamp_depth(1024, 128, 3) == 3
+        assert clamp_depth(64, 16, 3) == 3  # 8-pt tiles, 2 samples each: ok
+        assert clamp_depth(64, 32, 3) == 0  # tile floor: P >= 4 * k_per_tile
+        assert clamp_depth(100, 32, 3) == 0  # 100 not divisible by 2/4/8
+        assert clamp_depth(256, 64, 0) == 0
+
+    def test_get_engine_caches(self):
+        cfg = EngineConfig(pipeline="pc2im", n_centroids=16, depth=1)
+        assert get_engine(cfg) is get_engine(cfg)
+
+
+class TestRegistry:
+    def test_resolve_auto_off_tpu_is_xla_interpret(self):
+        backend, interpret = registry.resolve_backend("auto", None)
+        assert backend == ("pallas" if jax.default_backend() == "tpu" else "xla")
+        assert interpret == (jax.default_backend() != "tpu")
+
+    def test_unknown_backend_raises(self):
+        with pytest.raises(ValueError):
+            registry.resolve_backend("cuda")
+
+    def test_unknown_kernel_raises(self):
+        with pytest.raises(KeyError):
+            registry.get("not_a_kernel")
+
+    def test_registered_kernel_names(self):
+        import repro.kernels.fps.ops  # noqa: F401
+        import repro.kernels.knn3.ops  # noqa: F401
+        import repro.kernels.lattice.ops  # noqa: F401
+        import repro.kernels.sc_matmul.ops  # noqa: F401
+
+        assert {"fps_tiles", "knn3", "lattice_query", "lattice_query_tiles",
+                "sc_matmul"} <= set(registry.names())
+
+    def test_force_backend_overrides_auto(self):
+        with registry.force_backend("pallas"):
+            assert registry.resolve_backend("auto", None)[0] == "pallas"
+        assert registry.resolve_backend("auto", None)[0] != "pallas" or (
+            jax.default_backend() == "tpu"
+        )
+
+    def test_pad_to_multiple(self):
+        x = jnp.arange(6, dtype=jnp.float32).reshape(2, 3)
+        padded, pad = registry.pad_to_multiple(x, axis=1, multiple=4)
+        assert pad == 1 and padded.shape == (2, 4)
+        np.testing.assert_allclose(np.array(padded[:, 3]), np.array(x[:, 0]))
+        same, pad0 = registry.pad_to_multiple(x, axis=0, multiple=2)
+        assert pad0 == 0 and same is x
+
+
+class TestGridPartitionEdgeCases:
+    def test_overflow_drops_points_beyond_capacity(self):
+        # degenerate cloud: every point lands in cell 0 -> capacity 8 keeps 8
+        pts = jnp.zeros((32, 3))
+        part = P.grid_partition(pts, grid=2, capacity=8)
+        valid = np.array(part.valid)
+        assert valid.sum() == 8  # overflow dropped, not wrapped
+        kept = np.array(part.tiles)[valid]
+        assert len(np.unique(kept)) == 8
+
+    def test_utilization_reflects_occupancy(self):
+        pts = jax.random.uniform(jax.random.PRNGKey(0), (256, 3))
+        part = P.grid_partition(pts, grid=2, capacity=64)
+        util = float(part.utilization())
+        assert 0.0 < util <= 256 / (8 * 64) + 1e-6
+
+    def test_empty_cells_fully_masked(self):
+        # two opposite-corner clusters: only cells (0,0,0) and (1,1,1) occupied
+        a = jax.random.uniform(jax.random.PRNGKey(1), (32, 3)) * 0.05
+        pts = jnp.concatenate([a, a + 0.95])
+        part = P.grid_partition(pts, grid=2, capacity=64)
+        valid = np.array(part.valid)
+        assert valid.any(axis=1).sum() == 2  # 6 of 8 cells empty
+        assert valid.sum() == 64  # nothing dropped: capacity covers occupancy
+
+    def test_capacity_one(self):
+        pts = jax.random.uniform(jax.random.PRNGKey(2), (64, 3))
+        part = P.grid_partition(pts, grid=2, capacity=1)
+        assert part.tiles.shape == (8, 1)
+        valid = np.array(part.valid)
+        # exactly one survivor per occupied cell
+        c = np.array(pts)
+        lo, hi = c.min(0), c.max(0)
+        cell = np.clip(np.floor((c - lo) / np.maximum(hi - lo, 1e-12) * 2), 0, 1)
+        occupied = len(np.unique(cell[:, 0] * 4 + cell[:, 1] * 2 + cell[:, 2]))
+        assert valid.sum() == occupied
+
+
+class TestFPSSeedRegression:
+    """core.fps must never seed from a padded slot (grid tiles with an empty
+    slot 0 used to sample a fake point)."""
+
+    def test_seed_skips_invalid_slot0(self):
+        pts = jnp.concatenate([jnp.full((4, 3), 50.0), _clouds(1, 28, seed=5)[0]])
+        valid = jnp.arange(32) >= 4  # slots 0..3 are padding
+        idx = np.array(F.fps(pts, 8, valid=valid))
+        assert (idx >= 4).all()
+        assert idx[0] == 4  # first valid slot seeds the sample
+
+    def test_explicit_start_idx_still_respected(self):
+        pts = _clouds(1, 32, seed=6)[0]
+        idx = np.array(F.fps(pts, 4, start_idx=7))
+        assert idx[0] == 7
+
+    def test_all_valid_unchanged(self):
+        pts = _clouds(1, 32, seed=7)[0]
+        a = np.array(F.fps(pts, 8))
+        b = np.array(F.fps(pts, 8, valid=jnp.ones(32, bool)))
+        np.testing.assert_array_equal(a, b)
+
+    def test_baseline2_with_sparse_occupancy(self):
+        """End-to-end: clustered cloud -> grid tiles where high-id cells are
+        empty; every reported-valid centroid must be a real point."""
+        pts = jax.random.uniform(jax.random.PRNGKey(3), (128, 3)) * 0.2
+        res = PP.preprocess_baseline2(pts, 32, radius=0.5, nsample=8, grid=2)
+        ci = np.array(res.centroid_idx)
+        cv = np.array(res.centroid_valid)
+        assert cv.any()
+        assert (ci[cv] < 128).all() and (ci[cv] >= 0).all()

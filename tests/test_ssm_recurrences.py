@@ -6,8 +6,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis import given, settings, st
 
 from repro.configs.base import get_config
 from repro.models.mamba2 import ssd_forward
