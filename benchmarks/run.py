@@ -94,6 +94,35 @@ def engine_bench(b: int = 8, n: int = 2048) -> list[dict]:
     return rows
 
 
+def accelerator_bench(b: int = 8) -> list[dict]:
+    """End-to-end PC2IMAccelerator forward: float vs SC W16A16 feature path.
+
+    One compiled artifact per (config, policy); rows report us/call and
+    derived clouds/sec, so the SC-CIM path shows up in the perf trajectory
+    next to the preprocessing engine rows.
+    """
+    from repro.configs.base import get_config
+    from repro.core.accelerator import get_accelerator
+    from repro.core.policy import ExecutionPolicy
+    from repro.data.pointclouds import sample_batch
+
+    cfg = get_config("pointnet2-cls", smoke=True)
+    pts, _, _ = sample_batch(jax.random.PRNGKey(0), b, cfg.n_points)
+    accel_f = get_accelerator(cfg, ExecutionPolicy(quant="none"))
+    accel_q = get_accelerator(cfg, ExecutionPolicy(quant="sc_w16a16"))
+    params = accel_f.init(jax.random.PRNGKey(1))
+
+    rows = []
+    for tag, accel in (("fp32", accel_f), ("sc_w16a16", accel_q)):
+        us = _timeit(lambda p, x, a=accel: a.infer(p, x), params, pts, iters=10)
+        rows.append({
+            "name": f"accelerator/pc2im_b{b}_{tag}",
+            "us": us,
+            "derived": b / (us / 1e6),
+        })
+    return rows
+
+
 def main() -> None:
     import importlib
 
@@ -120,6 +149,8 @@ def main() -> None:
     for row in microbench():
         print(f"{row['name']},{row['us']:.1f},")
     for row in engine_bench():
+        print(f"{row['name']},{row['us']:.1f},{row['derived']:.1f} clouds/s")
+    for row in accelerator_bench():
         print(f"{row['name']},{row['us']:.1f},{row['derived']:.1f} clouds/s")
 
 

@@ -6,7 +6,6 @@ the utilisation/energy story.
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import energy as E
 from repro.core import fps as F

@@ -3,17 +3,20 @@
     PYTHONPATH=src python examples/quickstart.py
 
 Builds procedural point clouds, runs batched PC2IM preprocessing (median
-partition -> L1 FPS -> lattice query) through the PreprocessEngine, trains a
-small PointNet2 classifier for a few steps, and prints the
+partition -> L1 FPS -> lattice query) through the PreprocessEngine, then
+trains a small PointNet2 classifier through a `PC2IMAccelerator` — ONE
+(config, ExecutionPolicy) pair compiles the whole pipeline: preprocessing
+engines AND the (optionally SC-quantized) feature path — and prints the
 preprocessing-energy model numbers."""
 
 import jax
 
 from repro.configs.base import get_config
 from repro.core import energy as E
+from repro.core.accelerator import get_accelerator
 from repro.core.engine import EngineConfig, PreprocessEngine
+from repro.core.policy import ExecutionPolicy
 from repro.data.pointclouds import sample_batch
-from repro.models import pointnet2 as PN
 from repro.optim import adamw_init, adamw_update
 
 # --- 1. data + batched PC2IM preprocessing ----------------------------------
@@ -24,24 +27,31 @@ res = engine(pts)  # all 4 clouds in one launch
 print(f"sampled {res.centroid_idx.shape[0]}x{res.centroid_idx.shape[1]} centroids; "
       f"neighbour fill-rate {float(res.neighbors.mask.mean()):.2f}")
 
-# --- 2. train a small PointNet2 under the PC2IM flow ------------------------
-cfg = get_config("pointnet2-cls", smoke=True)
-params = PN.init_params(jax.random.PRNGKey(1), cfg)
+# --- 2. train a small PointNet2 through the accelerator ----------------------
+# swap quant="sc_w16a16" to train under the paper's C4 SC-CIM feature path
+accel = get_accelerator(get_config("pointnet2-cls", smoke=True),
+                        ExecutionPolicy(quant="none"))
+params = accel.init(jax.random.PRNGKey(1))
 state = adamw_init(params)
 
 
 @jax.jit
 def step(params, state, pts, labels):
-    (loss, aux), grads = jax.value_and_grad(PN.loss_fn, has_aux=True)(params, cfg, pts, labels)
+    (loss, aux), grads = jax.value_and_grad(accel.loss_fn, has_aux=True)(params, pts, labels)
     params, state, _ = adamw_update(grads, state, params, lr=2e-3)
     return params, state, aux
 
 
 for i in range(20):
-    pts, cls, _ = sample_batch(jax.random.PRNGKey(100 + i), 16, cfg.n_points)
+    pts, cls, _ = sample_batch(jax.random.PRNGKey(100 + i), 16, accel.config.n_points)
     params, state, aux = step(params, state, pts, cls)
     if i % 5 == 0:
         print(f"step {i}: loss={float(aux['loss']):.4f} acc={float(aux['accuracy']):.3f}")
+
+# quantized inference from the SAME params: a second accelerator artifact
+accel_q = get_accelerator(accel.config, ExecutionPolicy(quant="sc_w16a16"))
+logits_q = accel_q.infer(params, pts)
+print(f"SC W16A16 inference: logits {tuple(logits_q.shape)} via {accel_q!r}")
 
 # --- 3. the paper's energy story --------------------------------------------
 const, rep = E.calibrate_cim()

@@ -1,9 +1,12 @@
 """Batched LM serving: prefill a prompt batch, decode greedily with KV caches.
 
     PYTHONPATH=src python examples/serve_lm.py --arch gemma3-12b --tokens 16
+    PYTHONPATH=src python examples/serve_lm.py --quant sc_w16a16
 
 Uses the reduced (smoke) config so it runs on CPU; the same prefill/decode
-functions are what the decode_32k / long_500k dry-run cells lower at scale."""
+functions are what the decode_32k / long_500k dry-run cells lower at scale.
+--quant pins an ExecutionPolicy on the serve fns — every linear runs the
+SC-CIM integer path, with no config edit and no global state."""
 
 import argparse
 import time
@@ -12,6 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import get_config
+from repro.core.policy import ExecutionPolicy
 from repro.models.families import get_family_api
 from repro.serve import make_serve_fns
 
@@ -22,11 +26,13 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--tokens", type=int, default=16)
+    ap.add_argument("--quant", default=None, choices=["none", "sc_w16a16", "sc_w8a8"])
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=True)
     api = get_family_api(cfg)
-    fns = make_serve_fns(cfg)
+    policy = ExecutionPolicy(quant=args.quant) if args.quant else None
+    fns = make_serve_fns(cfg, policy=policy)
     params = api["init"](jax.random.PRNGKey(0), cfg)
 
     batch = {"tokens": jax.random.randint(

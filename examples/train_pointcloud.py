@@ -1,8 +1,11 @@
 """End-to-end driver: train PointNet2 segmentation with checkpoint/restart.
 
     PYTHONPATH=src python examples/train_pointcloud.py --steps 100
+    PYTHONPATH=src python examples/train_pointcloud.py --quant sc_w16a16
 
-Thin wrapper over the production driver (repro.launch.train)."""
+Thin wrapper over the production driver (repro.launch.train), which builds
+a PC2IMAccelerator from the config + ExecutionPolicy; --quant selects the
+SC-CIM feature path without touching the config."""
 
 import sys
 

@@ -18,7 +18,6 @@ Properties required at 1000-node scale, all implemented here:
 
 from __future__ import annotations
 
-import io
 import os
 import threading
 import uuid

@@ -8,4 +8,6 @@ C5  delayed aggregation                                      -> grouping.py
 Energy/cycle models for the paper's evaluation figures       -> energy.py
 End-to-end preprocessing pipelines (baseline1/2, pc2im)      -> preprocess.py
 Batched (B, N, 3) PreprocessEngine (batch x tiles -> 1 grid) -> engine.py
+ExecutionPolicy (quant/backend/interpret, passed explicitly) -> policy.py
+PC2IMAccelerator (config+policy -> compiled forward/infer)   -> accelerator.py
 """

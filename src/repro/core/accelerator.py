@@ -1,0 +1,121 @@
+"""PC2IMAccelerator — one (config, policy) pair -> compiled whole-pipeline artifacts.
+
+The paper's accelerator is ONE device: the CIM preprocessing dataflow
+(MSP -> L1 FPS -> lattice query) and the SC-CIM feature engine (quantized
+per-point MLPs) are co-scheduled halves of the same chip.  This module is
+the software image of that: a `PC2IMAccelerator` owns
+
+  * the per-SA-stage `PreprocessEngine`s (batch x MSP tiles folded into one
+    kernel grid, backend chosen by the policy), and
+  * the policy-driven feature path (every `nn.linear` under the same
+    `ExecutionPolicy` — float or SC W16A16/W8A8 through the kernel registry),
+
+and exposes cached, jit-compiled `forward` / `infer` / `loss` artifacts:
+
+    accel = get_accelerator(get_config("pointnet2-cls"),
+                            ExecutionPolicy(quant="sc_w16a16"))
+    params = accel.init(jax.random.PRNGKey(0))
+    logits = accel.infer(params, points)        # (B, N, 3+F) -> (B, C)
+    loss, metrics = accel.loss(params, points, labels)
+
+Because `ExecutionPolicy` and `PointNet2Config` are frozen/hashable, the
+accelerator cache gives exactly one compiled artifact per distinct
+(config, policy) — concurrent serving threads with different policies get
+different accelerators and can never interfere (the failure mode of the
+removed thread-local `nn.quant_mode`).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.core.policy import ExecutionPolicy, resolve_policy
+from repro.models import pointnet2 as PN
+
+
+class PC2IMAccelerator:
+    """Compiled PC2IM pipeline for one (PointNet2Config, ExecutionPolicy).
+
+    Attributes:
+        config  : the model/architecture description (WHAT to run).
+        policy  : the execution description (HOW to run) — quant mode,
+                  kernel backend, interpret flag.
+        engines : per-SA-stage PreprocessEngines, stage i consuming stage
+                  i-1's centroid count (shared with the forward trace via
+                  the global engine cache, so nothing compiles twice).
+    """
+
+    def __init__(self, config: PN.PointNet2Config, policy: ExecutionPolicy | None = None):
+        self.config = config
+        # resolve once: backend=None picks up the config's pinned backend for
+        # BOTH halves (engines and feature path) before anything is traced
+        self.policy = resolve_policy(config, policy)
+
+        engines = []
+        n = config.n_points
+        for sa in config.sa:
+            engines.append(PN.stage_engine(config, sa, n, self.policy))
+            n = sa.n_centroids
+        self.engines = tuple(engines)
+
+        cfg, pol = self.config, self.policy
+        # jit closes over the static (config, policy) pair: one artifact per
+        # accelerator, retraced only per input shape/dtype.
+        self._forward = jax.jit(
+            lambda params, points: PN.forward(params, cfg, points, policy=pol)
+        )
+        self._loss = jax.jit(
+            lambda params, points, labels: PN.loss_fn(
+                params, cfg, points, labels, policy=pol
+            )
+        )
+
+    # -- artifacts -----------------------------------------------------------
+
+    def init(self, key):
+        """Fresh parameters for this accelerator's config."""
+        return PN.init_params(key, self.config)
+
+    def forward(self, params, points: jax.Array) -> jax.Array:
+        """jit-compiled batched forward: (B, N, 3+F) -> logits."""
+        return self._forward(params, points)
+
+    def infer(self, params, points: jax.Array) -> jax.Array:
+        """Inference entry point — same compiled artifact as `forward`
+        (serving call-sites read better as `accel.infer`)."""
+        return self._forward(params, points)
+
+    def loss(self, params, points: jax.Array, labels: jax.Array):
+        """jit-compiled (loss, metrics) under this accelerator's policy."""
+        return self._loss(params, points, labels)
+
+    def loss_fn(self, params, points: jax.Array, labels: jax.Array):
+        """Un-jitted loss for use under jax.grad / custom training loops
+        (still pinned to this accelerator's policy)."""
+        return PN.loss_fn(params, self.config, points, labels, policy=self.policy)
+
+    def __repr__(self) -> str:
+        return (
+            f"PC2IMAccelerator({self.config.name}, quant={self.policy.quant!r}, "
+            f"backend={self.policy.backend!r}, stages={len(self.engines)})"
+        )
+
+
+@functools.lru_cache(maxsize=None)
+def _cached_accelerator(config, policy) -> PC2IMAccelerator:
+    return PC2IMAccelerator(config, policy)
+
+
+def get_accelerator(
+    config: PN.PointNet2Config, policy: ExecutionPolicy | None = None
+) -> PC2IMAccelerator:
+    """Accelerator cache: one compiled pipeline per (config, policy) pair.
+
+    The policy is resolved against the config BEFORE keying the cache, so
+    `get_accelerator(cfg)`, `get_accelerator(cfg, policy_for(cfg))` and a
+    backend=None policy that resolves to the same concrete backend all share
+    one artifact.
+    """
+    return _cached_accelerator(config, resolve_policy(config, policy))

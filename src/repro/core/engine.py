@@ -131,6 +131,8 @@ class PreprocessEngine:
 
     def __call__(self, points: jax.Array) -> PreprocessResult:
         if points.ndim == 2:
+            if points.shape[-1] != 3:
+                raise ValueError(f"expected (B, N, 3) or (N, 3), got {points.shape}")
             res = self._fn(points[None])
             return jax.tree.map(lambda x: x[0], res)
         if points.ndim != 3 or points.shape[-1] != 3:

@@ -1,0 +1,117 @@
+"""ExecutionPolicy — one explicit, hashable description of HOW to run.
+
+PC2IM is one accelerator with two coupled halves: the CIM preprocessing
+dataflow (MSP / FPS / lattice query) and the split-concatenate SC-CIM
+feature engine (quantized MLP MACs).  Both halves answer the same three
+questions — which numeric mode, which kernel backend, interpret or not —
+so both read them from the same object:
+
+    policy = ExecutionPolicy(quant="sc_w16a16", backend="xla")
+    y = nn.linear(params, x, policy=policy)          # SC-CIM feature path
+    engine = stage_engine(cfg, sa, n, policy)        # preprocessing path
+
+The policy is passed FUNCTIONALLY: plain argument threading, no
+thread-local or module-global state.  That makes execution configuration
+
+  * jit-safe     — the policy is static Python data closed over at trace
+                   time; two artifacts traced under different policies can
+                   never observe each other;
+  * thread-safe  — concurrent serving threads each hold their own policy
+                   (the exact failure mode of the old `nn.quant_mode`
+                   context manager, which leaked a thread-local default
+                   under work-stealing executors);
+  * hashable     — policies key jit/engine/accelerator caches directly
+                   (`PC2IMAccelerator` compiles one artifact per
+                   (config, policy) pair).
+
+`core/accelerator.py` builds the whole-pipeline artifact from one
+(config, policy) pair; this module holds only the policy itself so the
+kernels/, models/ and core/ layers can all import it without cycles.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+QUANT_MODES = ("none", "sc_w16a16", "sc_w8a8")
+_QUANT_BITS = {"sc_w16a16": 16, "sc_w8a8": 8}
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionPolicy:
+    """How to execute — orthogonal to WHAT to execute (the model config).
+
+    quant     : numeric mode for every dense layer routed through
+                `nn.linear` — "none" (float) or the paper's C4 SC-CIM
+                integer paths "sc_w16a16" / "sc_w8a8".
+    backend   : kernel-registry backend ("auto" | "pallas" | "xla") used
+                by BOTH halves: preprocessing kernels (FPS, lattice) and
+                the SC integer matmul behind quantized linears.  None means
+                "unspecified — defer to the config": a policy that only
+                sets quant keeps the config's pinned preproc_backend
+                instead of silently resetting it to "auto".
+    interpret : Pallas interpret-mode flag; None defers to the registry
+                default (interpret off-TPU).
+    precision / sharding : reserved knobs for later scaling PRs (matmul
+                precision, named sharding policies); carried now so the
+                policy's hash identity is stable when they land.
+    """
+
+    quant: str = "none"
+    backend: str | None = None
+    interpret: bool | None = None
+    precision: str = "default"
+    sharding: str | None = None
+
+    def __post_init__(self):
+        if self.quant not in QUANT_MODES:
+            raise ValueError(f"quant must be one of {QUANT_MODES}, got {self.quant!r}")
+        if self.backend not in (None, "auto", "pallas", "xla"):
+            raise ValueError(
+                f"backend must be None, 'auto', 'pallas' or 'xla', got {self.backend!r}"
+            )
+
+    @property
+    def quant_bits(self) -> int | None:
+        """Operand width of the SC integer path (None in float mode)."""
+        return _QUANT_BITS.get(self.quant)
+
+    def resolved_backend(self, default: str = "auto") -> str:
+        """backend with the None placeholder resolved (config default wins)."""
+        return self.backend if self.backend is not None else default
+
+
+DEFAULT_POLICY = ExecutionPolicy()
+
+
+def policy_for(cfg) -> ExecutionPolicy:
+    """Default policy of a model config.
+
+    Reads the config's declared numeric mode (`cfg.quant`) and, where the
+    config names a preprocessing backend (PointNet2Config.preproc_backend),
+    uses it for the whole pipeline — preprocessing AND the SC feature path,
+    which the old split API silently decoupled.
+    """
+    return ExecutionPolicy(
+        quant=getattr(cfg, "quant", "none"),
+        backend=getattr(cfg, "preproc_backend", "auto"),
+    )
+
+
+def resolve_policy(cfg, policy: ExecutionPolicy | None) -> ExecutionPolicy:
+    """Resolve a caller-supplied policy against a config, ONCE, before it is
+    threaded anywhere.
+
+    None -> the config's default policy.  backend=None -> the config's
+    pinned backend (preproc_backend, else "auto"), so BOTH halves —
+    preprocessing engines and the SC feature path — see the same concrete
+    backend decision; resolving at the entry point is what keeps them from
+    drifting apart.
+    """
+    if policy is None:
+        return policy_for(cfg)
+    if policy.backend is None:
+        return dataclasses.replace(
+            policy, backend=getattr(cfg, "preproc_backend", "auto")
+        )
+    return policy

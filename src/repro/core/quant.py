@@ -135,7 +135,8 @@ def quantized_linear(
     """W16A16 linear layer via SC decomposition: quantize -> sc_matmul -> dequant.
 
     x: (..., K) float, w: (K, N) float -> (..., N) float32.  This is the
-    `quant_mode="sc_w16a16"` path usable by any architecture's MLP.
+    XLA oracle behind the `ExecutionPolicy(quant="sc_w16a16")` path usable
+    by any architecture's MLP (production goes through kernels/sc_matmul).
     """
     n_planes = bits // PLANE_BITS
     lead = x.shape[:-1]

@@ -1,9 +1,10 @@
 """Public ops: SC integer matmul + the drop-in quantized linear layer.
 
-`sc_quantized_linear` is the `quant_mode="sc_w16a16"` path exposed to every
-architecture's MLP/projection layers (DESIGN §Arch-applicability): float in,
-float out, SC-CIM integer GEMM inside.  Backend selection goes through the
-kernel registry like every other kernel.
+`sc_quantized_linear` is the `ExecutionPolicy(quant="sc_w16a16")` path behind
+every architecture's MLP/projection layers (DESIGN §Arch-applicability):
+float in, float out, SC-CIM integer GEMM inside.  Backend selection goes
+through the kernel registry like every other kernel — `nn.linear` pipes the
+policy's backend/interpret flags straight here.
 """
 
 from __future__ import annotations

@@ -30,8 +30,6 @@ import time
 import traceback
 
 import jax
-import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import get_config
 from repro.launch import shapes as SH

@@ -16,8 +16,6 @@ batch carries precomputed frame/patch embeddings.
 
 from __future__ import annotations
 
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 

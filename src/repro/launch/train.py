@@ -13,6 +13,7 @@ paths on the local device (or the host-platform mesh for dry-runs)."""
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import jax
@@ -20,23 +21,35 @@ import jax.numpy as jnp
 
 from repro.checkpoint import CheckpointManager
 from repro.configs.base import get_config
+from repro.core.policy import ExecutionPolicy, resolve_policy
 from repro.data.tokens import Prefetcher, token_stream
 from repro.optim import adamw_init
 from repro.runtime import StragglerMonitor, run_with_restarts
 
 
+def _policy_override(cfg, args) -> ExecutionPolicy:
+    """Config default policy, with --quant applied on top when given."""
+    policy = resolve_policy(cfg, None)
+    if getattr(args, "quant", None):
+        policy = dataclasses.replace(policy, quant=args.quant)
+    return policy
+
+
 def train_pointcloud(cfg, args):
+    from repro.core.accelerator import get_accelerator
     from repro.data.pointclouds import sample_batch
-    from repro.models import pointnet2 as PN
     from repro.optim import adamw_update
 
-    params = PN.init_params(jax.random.PRNGKey(args.seed), cfg)
+    # one accelerator = preprocessing engines + policy-driven feature path
+    # (quant/backend from the config; --quant overrides without a new config)
+    accel = get_accelerator(cfg, _policy_override(cfg, args))
+    params = accel.init(jax.random.PRNGKey(args.seed))
     state = adamw_init(params)
 
     @jax.jit
     def step_fn(params, state, pts, labels):
-        (loss, aux), grads = jax.value_and_grad(PN.loss_fn, has_aux=True)(
-            params, cfg, pts, labels
+        (loss, aux), grads = jax.value_and_grad(accel.loss_fn, has_aux=True)(
+            params, pts, labels
         )
         params, state, m = adamw_update(
             grads, state, params, lr=args.lr, weight_decay=1e-4
@@ -75,7 +88,8 @@ def train_lm(cfg, args):
 
     api = get_family_api(cfg)
     step_raw = make_train_step(
-        cfg, peak_lr=args.lr, warmup_steps=max(args.steps // 10, 1), total_steps=args.steps
+        cfg, peak_lr=args.lr, warmup_steps=max(args.steps // 10, 1),
+        total_steps=args.steps, policy=_policy_override(cfg, args),
     )
     step_fn = jax.jit(step_raw, donate_argnums=(0, 1))
     mgr = CheckpointManager(args.ckpt_dir, every=args.ckpt_every) if args.ckpt_dir else None
@@ -135,6 +149,8 @@ def main():
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--quant", default=None, choices=["none", "sc_w16a16", "sc_w8a8"],
+                    help="override the config's quant mode (ExecutionPolicy)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--log-every", type=int, default=10)

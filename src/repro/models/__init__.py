@@ -9,5 +9,5 @@ mamba2.py          SSD (state-space duality) blocks
 rglru.py           Griffin RG-LRU recurrent blocks
 whisper.py         encoder-decoder (audio frontend stubbed per assignment)
 vlm.py             ViT-frontend-stub + LM backbone
-nn.py              param-dict linear/mlp/init utilities + quant_mode hook
+nn.py              param-dict linear/mlp/init utilities (ExecutionPolicy-aware)
 """

@@ -22,6 +22,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.core.policy import ExecutionPolicy, resolve_policy
 from repro.models import nn
 from repro.models import transformer as T
 from repro.models.layers import (
@@ -67,9 +68,11 @@ class SSMState(NamedTuple):
     cache_len: jax.Array
 
 
-def _ssm_backbone(params, cfg, h, collect_cache: bool):
+def _ssm_backbone(params, cfg, h, collect_cache: bool, policy=None):
     def body(hh, lp):
-        out, new_cache, _ = mamba2_apply(lp["mixer"], cfg, T._norm_apply(cfg, lp["norm"], hh))
+        out, new_cache, _ = mamba2_apply(
+            lp["mixer"], cfg, T._norm_apply(cfg, lp["norm"], hh), policy=policy
+        )
         hh = hint_residual(hh + out)
         return hh, (new_cache if collect_cache else None)
 
@@ -78,14 +81,14 @@ def _ssm_backbone(params, cfg, h, collect_cache: bool):
     return T._norm_apply(cfg, params["final_norm"], h), caches
 
 
-def ssm_train_loss(params, cfg, batch):
+def ssm_train_loss(params, cfg, batch, policy: ExecutionPolicy | None = None):
+    policy = resolve_policy(cfg, policy)
     tokens = batch["tokens"]
-    with nn.quant_mode(cfg.quant):
-        h = jnp.take(params["embed"], tokens, axis=0)
-        h, _ = _ssm_backbone(params, cfg, h, collect_cache=False)
-        loss = T.chunked_cross_entropy(
-            h, params["embed"].T, batch["labels"], chunk=cfg.loss_chunk
-        )
+    h = jnp.take(params["embed"], tokens, axis=0)
+    h, _ = _ssm_backbone(params, cfg, h, collect_cache=False, policy=policy)
+    loss = T.chunked_cross_entropy(
+        h, params["embed"].T, batch["labels"], chunk=cfg.loss_chunk
+    )
     return loss, {"loss": loss}
 
 
@@ -98,37 +101,42 @@ def ssm_init_decode_state(cfg, batch: int, s_max: int) -> SSMState:
     return SSMState(caches=cache, cache_len=jnp.zeros((), jnp.int32))
 
 
-def ssm_prefill(params, cfg, batch, s_max: int | None = None):
+def ssm_prefill(params, cfg, batch, s_max: int | None = None,
+                policy: ExecutionPolicy | None = None):
+    policy = resolve_policy(cfg, policy)
     tokens = batch["tokens"]
     s = tokens.shape[1]
-    with nn.quant_mode(cfg.quant):
-        h = jnp.take(params["embed"], tokens, axis=0)
+    h = jnp.take(params["embed"], tokens, axis=0)
 
-        def body(hh, lp):
-            out, new_cache, _ = mamba2_apply(lp["mixer"], cfg, T._norm_apply(cfg, lp["norm"], hh))
-            return hh + out, new_cache
+    def body(hh, lp):
+        out, new_cache, _ = mamba2_apply(
+            lp["mixer"], cfg, T._norm_apply(cfg, lp["norm"], hh), policy=policy
+        )
+        return hh + out, new_cache
 
-        h, caches = jax.lax.scan(body, h, params["blocks"])
-        h = T._norm_apply(cfg, params["final_norm"], h)
-        logits = (h[:, -1:] @ params["embed"].T).astype(jnp.float32)
+    h, caches = jax.lax.scan(body, h, params["blocks"])
+    h = T._norm_apply(cfg, params["final_norm"], h)
+    logits = (h[:, -1:] @ params["embed"].T).astype(jnp.float32)
     return logits, SSMState(caches=caches, cache_len=jnp.full((), s, jnp.int32))
 
 
-def ssm_decode_step(params, cfg, state: SSMState, batch):
+def ssm_decode_step(params, cfg, state: SSMState, batch,
+                    policy: ExecutionPolicy | None = None):
+    policy = resolve_policy(cfg, policy)
     token = batch["token"]
-    with nn.quant_mode(cfg.quant):
-        h = jnp.take(params["embed"], token, axis=0)
+    h = jnp.take(params["embed"], token, axis=0)
 
-        def body(hh, xs):
-            lp, cache = xs
-            out, new_cache, _ = mamba2_apply(
-                lp["mixer"], cfg, T._norm_apply(cfg, lp["norm"], hh), cache=cache
-            )
-            return hh + out, new_cache
+    def body(hh, xs):
+        lp, cache = xs
+        out, new_cache, _ = mamba2_apply(
+            lp["mixer"], cfg, T._norm_apply(cfg, lp["norm"], hh), cache=cache,
+            policy=policy,
+        )
+        return hh + out, new_cache
 
-        h, caches = jax.lax.scan(body, h, (params["blocks"], state.caches))
-        h = T._norm_apply(cfg, params["final_norm"], h)
-        logits = (h @ params["embed"].T).astype(jnp.float32)
+    h, caches = jax.lax.scan(body, h, (params["blocks"], state.caches))
+    h = T._norm_apply(cfg, params["final_norm"], h)
+    logits = (h @ params["embed"].T).astype(jnp.float32)
     return logits, SSMState(caches=caches, cache_len=state.cache_len + 1)
 
 
@@ -174,16 +182,17 @@ def hybrid_init(key, cfg: ModelConfig):
     }
 
 
-def _hybrid_slot_apply(cfg, slot_type, p, h, *, positions, cache=None, cache_len=None):
+def _hybrid_slot_apply(cfg, slot_type, p, h, *, positions, cache=None, cache_len=None,
+                       policy=None):
     x = T._norm_apply(cfg, p["ln1"], h)
     if slot_type == "recurrent":
-        out, new_cache = rglru_apply(p["mixer"], cfg, x, cache=cache)
+        out, new_cache = rglru_apply(p["mixer"], cfg, x, cache=cache, policy=policy)
     else:
         acfg = T.attn_cfg_for(cfg, slot_type)
         if cache is None:
             out, kv = attn_apply(
                 p["mixer"], acfg, x, positions=positions,
-                collect_kv=True, attn_block=cfg.attn_block,
+                collect_kv=True, attn_block=cfg.attn_block, policy=policy,
             )
             new_cache = KVCache(*kv)
         else:
@@ -192,10 +201,12 @@ def _hybrid_slot_apply(cfg, slot_type, p, h, *, positions, cache=None, cache_len
                 p["mixer"], acfg, x, positions=positions, cache=cache,
                 write_idx=jnp.mod(cache_len, s_eff),
                 attend_len=jnp.minimum(cache_len + 1, s_eff),
-                decode_window=None, attn_block=cfg.attn_block,
+                decode_window=None, attn_block=cfg.attn_block, policy=policy,
             )
     h = h + out
-    h = h + glu_mlp_apply(p["mlp"], T._norm_apply(cfg, p["ln2"], h), act=cfg.act)
+    h = h + glu_mlp_apply(
+        p["mlp"], T._norm_apply(cfg, p["ln2"], h), act=cfg.act, policy=policy
+    )
     return h, new_cache
 
 
@@ -231,7 +242,8 @@ def hybrid_init_decode_state(cfg, batch: int, s_max: int) -> HybridState:
     return HybridState(group_caches, rem_caches, jnp.zeros((), jnp.int32))
 
 
-def _hybrid_run(params, cfg, h, positions, *, state: HybridState | None, collect: bool):
+def _hybrid_run(params, cfg, h, positions, *, state: HybridState | None, collect: bool,
+                policy=None):
     """Shared stack runner.  state=None: train; collect: gather prefill caches."""
     decode = state is not None and h.shape[1] == 1
 
@@ -244,6 +256,7 @@ def _hybrid_run(params, cfg, h, positions, *, state: HybridState | None, collect
                 cfg, slot_type, group_params[s], hh, positions=positions,
                 cache=caches[s] if decode else None,
                 cache_len=state.cache_len if decode else None,
+                policy=policy,
             )
             hh = hint_residual(hh)
             outs.append(aux)
@@ -263,32 +276,36 @@ def _hybrid_run(params, cfg, h, positions, *, state: HybridState | None, collect
         h, aux = _hybrid_slot_apply(
             cfg, slot_type, rp, h, positions=positions,
             cache=hh_cache, cache_len=state.cache_len if decode else None,
+            policy=policy,
         )
         rem_out.append(aux)
     h = T._norm_apply(cfg, params["final_norm"], h)
     return h, group_out, tuple(rem_out)
 
 
-def hybrid_train_loss(params, cfg, batch):
+def hybrid_train_loss(params, cfg, batch, policy: ExecutionPolicy | None = None):
+    policy = resolve_policy(cfg, policy)
     tokens = batch["tokens"]
     s = tokens.shape[1]
-    with nn.quant_mode(cfg.quant):
-        h = jnp.take(params["embed"], tokens, axis=0)
-        h, _, _ = _hybrid_run(params, cfg, h, jnp.arange(s)[None], state=None, collect=False)
-        loss = T.chunked_cross_entropy(h, params["embed"].T, batch["labels"], chunk=cfg.loss_chunk)
+    h = jnp.take(params["embed"], tokens, axis=0)
+    h, _, _ = _hybrid_run(
+        params, cfg, h, jnp.arange(s)[None], state=None, collect=False, policy=policy
+    )
+    loss = T.chunked_cross_entropy(h, params["embed"].T, batch["labels"], chunk=cfg.loss_chunk)
     return loss, {"loss": loss}
 
 
-def hybrid_prefill(params, cfg, batch, s_max: int | None = None):
+def hybrid_prefill(params, cfg, batch, s_max: int | None = None,
+                   policy: ExecutionPolicy | None = None):
+    policy = resolve_policy(cfg, policy)
     tokens = batch["tokens"]
     b, s = tokens.shape
     s_max = s_max or s
-    with nn.quant_mode(cfg.quant):
-        h = jnp.take(params["embed"], tokens, axis=0)
-        h, group_out, rem_out = _hybrid_run(
-            params, cfg, h, jnp.arange(s)[None], state=None, collect=True
-        )
-        logits = (h[:, -1:] @ params["embed"].T).astype(jnp.float32)
+    h = jnp.take(params["embed"], tokens, axis=0)
+    h, group_out, rem_out = _hybrid_run(
+        params, cfg, h, jnp.arange(s)[None], state=None, collect=True, policy=policy
+    )
+    logits = (h[:, -1:] @ params["embed"].T).astype(jnp.float32)
 
     def fit_kv(kv: KVCache, stacked: bool):
         """Truncate to the rolling-window size and ALIGN slots so that
@@ -319,13 +336,16 @@ def hybrid_prefill(params, cfg, batch, s_max: int | None = None):
     return logits, HybridState(group_caches, rem_caches, jnp.full((), s, jnp.int32))
 
 
-def hybrid_decode_step(params, cfg, state: HybridState, batch):
+def hybrid_decode_step(params, cfg, state: HybridState, batch,
+                       policy: ExecutionPolicy | None = None):
+    policy = resolve_policy(cfg, policy)
     token = batch["token"]
     pos = state.cache_len.reshape(1, 1)
-    with nn.quant_mode(cfg.quant):
-        h = jnp.take(params["embed"], token, axis=0)
-        h, group_out, rem_out = _hybrid_run(params, cfg, h, pos, state=state, collect=False)
-        logits = (h @ params["embed"].T).astype(jnp.float32)
+    h = jnp.take(params["embed"], token, axis=0)
+    h, group_out, rem_out = _hybrid_run(
+        params, cfg, h, pos, state=state, collect=False, policy=policy
+    )
+    logits = (h @ params["embed"].T).astype(jnp.float32)
     return logits, HybridState(group_out, rem_out, state.cache_len + 1)
 
 
@@ -379,7 +399,7 @@ def encdec_init(key, cfg: ModelConfig):
     }
 
 
-def _encode(params, cfg, enc_embeds):
+def _encode(params, cfg, enc_embeds, policy=None):
     """enc_embeds: (B, S_enc, D) — the stubbed conv-frontend output."""
     s = enc_embeds.shape[1]
     h = enc_embeds + _sinusoidal_pos(s, cfg.d_model)[None].astype(enc_embeds.dtype)
@@ -388,9 +408,14 @@ def _encode(params, cfg, enc_embeds):
 
     def body(hh, lp):
         x = T._norm_apply(cfg, lp["ln1"], hh)
-        a, _ = attn_apply(lp["attn"], acfg, x, positions=positions, attn_block=cfg.attn_block)
+        a, _ = attn_apply(
+            lp["attn"], acfg, x, positions=positions, attn_block=cfg.attn_block,
+            policy=policy,
+        )
         hh = hh + a
-        hh = hh + dense_mlp_apply(lp["mlp"], T._norm_apply(cfg, lp["ln2"], hh), act="gelu")
+        hh = hh + dense_mlp_apply(
+            lp["mlp"], T._norm_apply(cfg, lp["ln2"], hh), act="gelu", policy=policy
+        )
         return hint_residual(hh), None
 
     h, _ = jax.lax.scan(T._maybe_remat(cfg, body), h, params["enc_blocks"])
@@ -398,17 +423,18 @@ def _encode(params, cfg, enc_embeds):
 
 
 def _dec_slot_apply(cfg, p, h, enc_out, *, positions, self_cache=None, cache_len=None,
-                    cross_kv=None, collect=False):
+                    cross_kv=None, collect=False, policy=None):
     acfg = T.attn_cfg_for(cfg, "global")
     x = T._norm_apply(cfg, p["ln1"], h)
     if self_cache is None:
         a, kv = attn_apply(p["self_attn"], acfg, x, positions=positions,
-                           collect_kv=collect, attn_block=cfg.attn_block)
+                           collect_kv=collect, attn_block=cfg.attn_block, policy=policy)
         new_self = KVCache(*kv) if collect else None
     else:
         a, new_self = attn_apply(
             p["self_attn"], acfg, x, positions=positions, cache=self_cache,
             write_idx=cache_len, attend_len=cache_len + 1, attn_block=cfg.attn_block,
+            policy=policy,
         )
     h = h + a
     xq = T._norm_apply(cfg, p["ln_x"], h)
@@ -417,23 +443,25 @@ def _dec_slot_apply(cfg, p, h, enc_out, *, positions, self_cache=None, cache_len
         c, ckv = attn_apply(
             p["cross_attn"], T.attn_cfg_for(cfg, "global", causal=False), xq,
             positions=positions, kv_override=(enc_out, enc_out),
-            collect_kv=False, attn_block=cfg.attn_block,
+            collect_kv=False, attn_block=cfg.attn_block, policy=policy,
         )
         b, se, _ = enc_out.shape
         hk, dh = cfg.n_kv_heads, cfg.head_dim
-        k = nn.linear(p["cross_attn"]["wk"], enc_out).reshape(b, se, hk, dh)
-        v = nn.linear(p["cross_attn"]["wv"], enc_out).reshape(b, se, hk, dh)
+        k = nn.linear(p["cross_attn"]["wk"], enc_out, policy=policy).reshape(b, se, hk, dh)
+        v = nn.linear(p["cross_attn"]["wv"], enc_out, policy=policy).reshape(b, se, hk, dh)
         new_cross = KVCache(k, v) if collect else None
     else:
         # decode: attend over cached cross K/V
         b = xq.shape[0]
         hq, dh = cfg.n_heads, cfg.head_dim
-        q = nn.linear(p["cross_attn"]["wq"], xq).reshape(b, 1, hq, dh)
+        q = nn.linear(p["cross_attn"]["wq"], xq, policy=policy).reshape(b, 1, hq, dh)
         o = decode_attention(q, cross_kv.k, cross_kv.v, cache_len=cross_kv.k.shape[1])
-        c = nn.linear(p["cross_attn"]["wo"], o.reshape(b, 1, hq * dh))
+        c = nn.linear(p["cross_attn"]["wo"], o.reshape(b, 1, hq * dh), policy=policy)
         new_cross = cross_kv
     h = h + c
-    h = h + dense_mlp_apply(p["mlp"], T._norm_apply(cfg, p["ln2"], h), act="gelu")
+    h = h + dense_mlp_apply(
+        p["mlp"], T._norm_apply(cfg, p["ln2"], h), act="gelu", policy=policy
+    )
     return h, new_self, new_cross
 
 
@@ -443,31 +471,36 @@ class EncDecState(NamedTuple):
     cache_len: jax.Array
 
 
-def encdec_train_loss(params, cfg, batch):
+def encdec_train_loss(params, cfg, batch, policy: ExecutionPolicy | None = None):
+    policy = resolve_policy(cfg, policy)
     tokens = batch["tokens"]
     b, s = tokens.shape
     positions = jnp.arange(s)[None]
-    with nn.quant_mode(cfg.quant):
-        enc_out = _encode(params, cfg, batch["enc_embeds"])
-        h = jnp.take(params["embed"], tokens, axis=0)
-        h = h + _sinusoidal_pos(s, cfg.d_model)[None].astype(h.dtype)
+    enc_out = _encode(params, cfg, batch["enc_embeds"], policy=policy)
+    h = jnp.take(params["embed"], tokens, axis=0)
+    h = h + _sinusoidal_pos(s, cfg.d_model)[None].astype(h.dtype)
 
-        def body(hh, lp):
-            hh, _, _ = _dec_slot_apply(cfg, lp, hh, enc_out, positions=positions)
-            return hint_residual(hh), None
+    def body(hh, lp):
+        hh, _, _ = _dec_slot_apply(
+            cfg, lp, hh, enc_out, positions=positions, policy=policy
+        )
+        return hint_residual(hh), None
 
-        h, _ = jax.lax.scan(T._maybe_remat(cfg, body), h, params["dec_blocks"])
-        h = T._norm_apply(cfg, params["final_norm"], h)
-        loss = T.chunked_cross_entropy(h, params["embed"].T, batch["labels"], chunk=cfg.loss_chunk)
+    h, _ = jax.lax.scan(T._maybe_remat(cfg, body), h, params["dec_blocks"])
+    h = T._norm_apply(cfg, params["final_norm"], h)
+    loss = T.chunked_cross_entropy(h, params["embed"].T, batch["labels"], chunk=cfg.loss_chunk)
     return loss, {"loss": loss}
 
 
 def encdec_init_decode_state(cfg, batch: int, s_max: int, s_enc: int | None = None) -> EncDecState:
     s_enc = s_enc or s_max
-    l = cfg.n_layers
-    shape_s = (l, batch, s_max, cfg.n_kv_heads, cfg.head_dim)
-    shape_x = (l, batch, s_enc, cfg.n_kv_heads, cfg.head_dim)
-    z = lambda sh: jnp.zeros(sh, cfg.dtype)
+    nl = cfg.n_layers
+    shape_s = (nl, batch, s_max, cfg.n_kv_heads, cfg.head_dim)
+    shape_x = (nl, batch, s_enc, cfg.n_kv_heads, cfg.head_dim)
+
+    def z(sh):
+        return jnp.zeros(sh, cfg.dtype)
+
     return EncDecState(
         self_caches=KVCache(z(shape_s), z(shape_s)),
         cross_caches=KVCache(z(shape_x), z(shape_x)),
@@ -475,53 +508,55 @@ def encdec_init_decode_state(cfg, batch: int, s_max: int, s_enc: int | None = No
     )
 
 
-def encdec_prefill(params, cfg, batch, s_max: int | None = None):
+def encdec_prefill(params, cfg, batch, s_max: int | None = None,
+                   policy: ExecutionPolicy | None = None):
+    policy = resolve_policy(cfg, policy)
     tokens = batch["tokens"]
     b, s = tokens.shape
     s_max = s_max or s
     positions = jnp.arange(s)[None]
-    with nn.quant_mode(cfg.quant):
-        enc_out = _encode(params, cfg, batch["enc_embeds"])
-        h = jnp.take(params["embed"], tokens, axis=0)
-        h = h + _sinusoidal_pos(s, cfg.d_model)[None].astype(h.dtype)
+    enc_out = _encode(params, cfg, batch["enc_embeds"], policy=policy)
+    h = jnp.take(params["embed"], tokens, axis=0)
+    h = h + _sinusoidal_pos(s, cfg.d_model)[None].astype(h.dtype)
 
-        def body(hh, lp):
-            hh, sc, cc = _dec_slot_apply(
-                cfg, lp, hh, enc_out, positions=positions, collect=True
-            )
-            return hh, (sc, cc)
+    def body(hh, lp):
+        hh, sc, cc = _dec_slot_apply(
+            cfg, lp, hh, enc_out, positions=positions, collect=True, policy=policy
+        )
+        return hh, (sc, cc)
 
-        h, (self_kv, cross_kv) = jax.lax.scan(body, h, params["dec_blocks"])
-        h = T._norm_apply(cfg, params["final_norm"], h)
-        logits = (h[:, -1:] @ params["embed"].T).astype(jnp.float32)
+    h, (self_kv, cross_kv) = jax.lax.scan(body, h, params["dec_blocks"])
+    h = T._norm_apply(cfg, params["final_norm"], h)
+    logits = (h[:, -1:] @ params["embed"].T).astype(jnp.float32)
     if s_max > s:
         pad = [(0, 0), (0, 0), (0, s_max - s), (0, 0), (0, 0)]
         self_kv = KVCache(jnp.pad(self_kv.k, pad), jnp.pad(self_kv.v, pad))
     return logits, EncDecState(self_kv, cross_kv, jnp.full((), s, jnp.int32))
 
 
-def encdec_decode_step(params, cfg, state: EncDecState, batch):
+def encdec_decode_step(params, cfg, state: EncDecState, batch,
+                       policy: ExecutionPolicy | None = None):
+    policy = resolve_policy(cfg, policy)
     token = batch["token"]
     pos = state.cache_len.reshape(1, 1)
-    with nn.quant_mode(cfg.quant):
-        h = jnp.take(params["embed"], token, axis=0)
-        # absolute (sinusoidal) decoder position, gathered at the current index
-        table = _sinusoidal_pos(state.self_caches.k.shape[2], cfg.d_model)
-        h = h + jnp.take(table, pos, axis=0).astype(h.dtype)
+    h = jnp.take(params["embed"], token, axis=0)
+    # absolute (sinusoidal) decoder position, gathered at the current index
+    table = _sinusoidal_pos(state.self_caches.k.shape[2], cfg.d_model)
+    h = h + jnp.take(table, pos, axis=0).astype(h.dtype)
 
-        def body(hh, xs):
-            lp, sc, cc = xs
-            hh, new_sc, new_cc = _dec_slot_apply(
-                cfg, lp, hh, None, positions=pos,
-                self_cache=sc, cache_len=state.cache_len, cross_kv=cc,
-            )
-            return hh, (new_sc, new_cc)
-
-        h, (self_kv, cross_kv) = jax.lax.scan(
-            body, h, (params["dec_blocks"], state.self_caches, state.cross_caches)
+    def body(hh, xs):
+        lp, sc, cc = xs
+        hh, new_sc, new_cc = _dec_slot_apply(
+            cfg, lp, hh, None, positions=pos,
+            self_cache=sc, cache_len=state.cache_len, cross_kv=cc, policy=policy,
         )
-        h = T._norm_apply(cfg, params["final_norm"], h)
-        logits = (h @ params["embed"].T).astype(jnp.float32)
+        return hh, (new_sc, new_cc)
+
+    h, (self_kv, cross_kv) = jax.lax.scan(
+        body, h, (params["dec_blocks"], state.self_caches, state.cross_caches)
+    )
+    h = T._norm_apply(cfg, params["final_norm"], h)
+    logits = (h @ params["embed"].T).astype(jnp.float32)
     return logits, EncDecState(self_kv, cross_kv, state.cache_len + 1)
 
 
@@ -539,48 +574,51 @@ def vlm_init(key, cfg: ModelConfig):
     return params
 
 
-def vlm_embed(params, cfg, batch):
+def vlm_embed(params, cfg, batch, policy=None):
     """concat(projected patch embeds, token embeds) -> (B, P + S_text, D)."""
-    patches = nn.linear(params["patch_proj"], batch["patch_embeds"].astype(cfg.dtype))
+    patches = nn.linear(
+        params["patch_proj"], batch["patch_embeds"].astype(cfg.dtype), policy=policy
+    )
     tok = jnp.take(params["embed"], batch["tokens"], axis=0)
     return jnp.concatenate([patches, tok], axis=1)
 
 
-def vlm_train_loss(params, cfg, batch):
-    with nn.quant_mode(cfg.quant):
-        h = vlm_embed(params, cfg, batch)
-        s = h.shape[1]
-        h = T.backbone(params, cfg, h, jnp.arange(s)[None])
-        n_p = batch["patch_embeds"].shape[1]
-        h_text = h[:, n_p:]
-        loss = T.chunked_cross_entropy(
-            h_text, T.lm_head_weights(params, cfg), batch["labels"], chunk=cfg.loss_chunk
-        )
+def vlm_train_loss(params, cfg, batch, policy: ExecutionPolicy | None = None):
+    policy = resolve_policy(cfg, policy)
+    h = vlm_embed(params, cfg, batch, policy=policy)
+    s = h.shape[1]
+    h = T.backbone(params, cfg, h, jnp.arange(s)[None], policy=policy)
+    n_p = batch["patch_embeds"].shape[1]
+    h_text = h[:, n_p:]
+    loss = T.chunked_cross_entropy(
+        h_text, T.lm_head_weights(params, cfg), batch["labels"], chunk=cfg.loss_chunk
+    )
     return loss, {"loss": loss}
 
 
-def vlm_prefill(params, cfg, batch, s_max: int | None = None):
+def vlm_prefill(params, cfg, batch, s_max: int | None = None,
+                policy: ExecutionPolicy | None = None):
     """Prefill over [patches; prompt tokens].  Reuses the dense-LM cache path
     by running the group scan with collect_kv on the combined embedding."""
-    with nn.quant_mode(cfg.quant):
-        h = vlm_embed(params, cfg, batch)
+    policy = resolve_policy(cfg, policy)
+    h = vlm_embed(params, cfg, batch, policy=policy)
     b, s, _ = h.shape
     s_max = s_max or s
     positions = jnp.arange(s)[None]
-    with nn.quant_mode(cfg.quant):
-        def group_body(hh, group_params):
-            kvs = []
-            for slot, slot_type in enumerate(cfg.layer_pattern):
-                hh, kv = T._block_apply(
-                    cfg, slot_type, group_params[slot], hh,
-                    positions=positions, collect_kv=True,
-                )
-                kvs.append(KVCache(*kv))
-            return hh, tuple(kvs)
 
-        h, kv_stacked = jax.lax.scan(group_body, h, tuple(params["blocks"]))
-        h = T._norm_apply(cfg, params["final_norm"], h)
-        logits = (h[:, -1:] @ T.lm_head_weights(params, cfg)).astype(jnp.float32)
+    def group_body(hh, group_params):
+        kvs = []
+        for slot, slot_type in enumerate(cfg.layer_pattern):
+            hh, kv = T._block_apply(
+                cfg, slot_type, group_params[slot], hh,
+                positions=positions, collect_kv=True, policy=policy,
+            )
+            kvs.append(KVCache(*kv))
+        return hh, tuple(kvs)
+
+    h, kv_stacked = jax.lax.scan(group_body, h, tuple(params["blocks"]))
+    h = T._norm_apply(cfg, params["final_norm"], h)
+    logits = (h[:, -1:] @ T.lm_head_weights(params, cfg)).astype(jnp.float32)
     caches = []
     for slot in range(len(cfg.layer_pattern)):
         k, v = kv_stacked[slot]
@@ -591,8 +629,8 @@ def vlm_prefill(params, cfg, batch, s_max: int | None = None):
     return logits, T.DecodeState(caches=tuple(caches), cache_len=jnp.full((), s, jnp.int32))
 
 
-def vlm_decode_step(params, cfg, state, batch):
-    return T.decode_step(params, cfg, state, batch["token"])
+def vlm_decode_step(params, cfg, state, batch, policy: ExecutionPolicy | None = None):
+    return T.decode_step(params, cfg, state, batch["token"], policy=policy)
 
 
 # ===========================================================================
@@ -600,13 +638,19 @@ def vlm_decode_step(params, cfg, state, batch):
 # ===========================================================================
 
 def get_family_api(cfg: ModelConfig) -> dict:
+    """Uniform per-family API.  Every forward-path entry accepts an optional
+    `policy=` ExecutionPolicy (None -> the config's default via policy_for)."""
     fam = cfg.family
     if fam in ("dense", "moe"):
         return {
             "init": T.init_lm,
             "train_loss": T.lm_loss,
-            "prefill": lambda p, c, b, s_max=None: T.prefill(p, c, b["tokens"], s_max),
-            "decode_step": lambda p, c, st, b: T.decode_step(p, c, st, b["token"]),
+            "prefill": lambda p, c, b, s_max=None, policy=None: T.prefill(
+                p, c, b["tokens"], s_max, policy=policy
+            ),
+            "decode_step": lambda p, c, st, b, policy=None: T.decode_step(
+                p, c, st, b["token"], policy=policy
+            ),
             "init_decode_state": T.init_decode_state,
         }
     if fam == "ssm":

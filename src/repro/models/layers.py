@@ -133,7 +133,7 @@ def _flash_fwd_impl(cfg, q, k, v):
     l0 = jnp.zeros((b, hq, s, 1), jnp.float32)
 
     def body(carry, ij):
-        acc, m, l = carry
+        acc, m, den = carry
         i, j = ij
         qi = jax.lax.dynamic_slice_in_dim(q, i * blk, blk, axis=2)
         kj = jax.lax.dynamic_slice_in_dim(k, j * blk, blk, axis=2)
@@ -147,7 +147,7 @@ def _flash_fwd_impl(cfg, q, k, v):
         scores = scores.reshape(b, hq, blk, blk)
 
         mi = jax.lax.dynamic_slice_in_dim(m, i * blk, blk, axis=2)
-        li = jax.lax.dynamic_slice_in_dim(l, i * blk, blk, axis=2)
+        li = jax.lax.dynamic_slice_in_dim(den, i * blk, blk, axis=2)
         acci = jax.lax.dynamic_slice_in_dim(acc, i * blk, blk, axis=2)
 
         m_new = jnp.maximum(mi, scores.max(-1, keepdims=True))
@@ -167,12 +167,12 @@ def _flash_fwd_impl(cfg, q, k, v):
 
         acc = jax.lax.dynamic_update_slice_in_dim(acc, acc_new, i * blk, axis=2)
         m = jax.lax.dynamic_update_slice_in_dim(m, m_new, i * blk, axis=2)
-        l = jax.lax.dynamic_update_slice_in_dim(l, l_new, i * blk, axis=2)
-        return (acc, m, l), None
+        den = jax.lax.dynamic_update_slice_in_dim(den, l_new, i * blk, axis=2)
+        return (acc, m, den), None
 
-    (acc, m, l), _ = jax.lax.scan(body, (acc0, m0, l0), (pi, pj))
-    out = acc / jnp.maximum(l, 1e-20)
-    lse = jnp.where(l > 0, m + jnp.log(jnp.maximum(l, 1e-20)), _NEG_INF)
+    (acc, m, den), _ = jax.lax.scan(body, (acc0, m0, l0), (pi, pj))
+    out = acc / jnp.maximum(den, 1e-20)
+    lse = jnp.where(den > 0, m + jnp.log(jnp.maximum(den, 1e-20)), _NEG_INF)
     return out, lse
 
 
@@ -428,6 +428,7 @@ def attn_apply(
     collect_kv: bool = False,
     decode_window: int | None = None,
     attn_block: int = 512,
+    policy=None,
 ):
     """x: (B, S, D).  Train/prefill when cache is None; decode (S==1) writes
     new K/V at `write_idx` and attends over `attend_len` entries (rolling
@@ -438,15 +439,15 @@ def attn_apply(
     (k, v) when collect_kv, else None."""
     b, s, _ = x.shape
     h, hk, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
-    q = nn.linear(p["wq"], x).reshape(b, s, h, dh)
+    q = nn.linear(p["wq"], x, policy=policy).reshape(b, s, h, dh)
     if kv_override is None:
-        k = nn.linear(p["wk"], x).reshape(b, s, hk, dh)
-        v = nn.linear(p["wv"], x).reshape(b, s, hk, dh)
+        k = nn.linear(p["wk"], x, policy=policy).reshape(b, s, hk, dh)
+        v = nn.linear(p["wv"], x, policy=policy).reshape(b, s, hk, dh)
     else:
         xkv = kv_override[0]
         sk = xkv.shape[1]
-        k = nn.linear(p["wk"], xkv).reshape(b, sk, hk, dh)
-        v = nn.linear(p["wv"], xkv).reshape(b, sk, hk, dh)
+        k = nn.linear(p["wk"], xkv, policy=policy).reshape(b, sk, hk, dh)
+        v = nn.linear(p["wv"], xkv, policy=policy).reshape(b, sk, hk, dh)
     if cfg.qk_norm:
         q = rmsnorm(p["qnorm"], q)
         k = rmsnorm(p["knorm"], k)
@@ -484,7 +485,7 @@ def attn_apply(
         )
         if collect_kv:
             aux = (k, v)
-    out = nn.linear(p["wo"], out.reshape(b, s, h * dh))
+    out = nn.linear(p["wo"], out.reshape(b, s, h * dh), policy=policy)
     return out, aux
 
 
@@ -501,9 +502,13 @@ def glu_mlp_init(key, d_model: int, d_ff: int, *, bias: bool = False, dtype=jnp.
     }
 
 
-def glu_mlp_apply(p, x: jax.Array, act: str = "silu") -> jax.Array:
+def glu_mlp_apply(p, x: jax.Array, act: str = "silu", policy=None) -> jax.Array:
     a = {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[act]
-    return nn.linear(p["wo"], a(nn.linear(p["wg"], x)) * nn.linear(p["wi"], x))
+    return nn.linear(
+        p["wo"],
+        a(nn.linear(p["wg"], x, policy=policy)) * nn.linear(p["wi"], x, policy=policy),
+        policy=policy,
+    )
 
 
 def dense_mlp_init(key, d_model: int, d_ff: int, *, bias: bool = True, dtype=jnp.float32):
@@ -514,6 +519,6 @@ def dense_mlp_init(key, d_model: int, d_ff: int, *, bias: bool = True, dtype=jnp
     }
 
 
-def dense_mlp_apply(p, x: jax.Array, act: str = "gelu") -> jax.Array:
+def dense_mlp_apply(p, x: jax.Array, act: str = "gelu", policy=None) -> jax.Array:
     a = {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[act]
-    return nn.linear(p["wo"], a(nn.linear(p["wi"], x)))
+    return nn.linear(p["wo"], a(nn.linear(p["wi"], x, policy=policy)), policy=policy)

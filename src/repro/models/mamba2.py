@@ -130,13 +130,13 @@ def ssd_forward(x, dt, A, B, C, *, chunk: int):
     return y, final_state
 
 
-def mamba2_apply(p, cfg, x: jax.Array, cache: SSMCache | None = None):
+def mamba2_apply(p, cfg, x: jax.Array, cache: SSMCache | None = None, policy=None):
     """x: (B, S, d_model).  Train/prefill (cache None) or decode (S == 1)."""
     bsz, s, _ = x.shape
     d_inner, n_heads, conv_dim = mamba2_dims(cfg)
     n = cfg.ssm_state
 
-    zxbcdt = nn.linear(p["in_proj"], x)  # (B, S, 2*d_inner + 2n + H)
+    zxbcdt = nn.linear(p["in_proj"], x, policy=policy)  # (B, S, 2*d_inner + 2n + H)
     z = zxbcdt[..., :d_inner]  # gate
     xbc = zxbcdt[..., d_inner : d_inner + conv_dim]  # x, B, C (convolved)
     dt_raw = zxbcdt[..., d_inner + conv_dim :]  # (B, S, H)
@@ -186,4 +186,4 @@ def mamba2_apply(p, cfg, x: jax.Array, cache: SSMCache | None = None):
     y = y + xs.astype(jnp.float32) * p["D"][None, None, :, None]
     y = y.reshape(bsz, s, d_inner).astype(x.dtype)
     y = rmsnorm(p["norm"], y * jax.nn.silu(z))
-    return nn.linear(p["out_proj"], y), new_cache, aux_state
+    return nn.linear(p["out_proj"], y, policy=policy), new_cache, aux_state

@@ -35,7 +35,7 @@ def moe_init(key, cfg, dtype=jnp.float32):
     }
 
 
-def moe_apply(p, cfg, x: jax.Array) -> jax.Array:
+def moe_apply(p, cfg, x: jax.Array, policy=None) -> jax.Array:
     """x: (B, S, d) -> (B, S, d).  Capacity-dropped top-k routing.
 
     Each batch row is a routing GROUP (GShard grouping): the capacity-rank
@@ -46,7 +46,7 @@ def moe_apply(p, cfg, x: jax.Array) -> jax.Array:
     cap = int(max(1, round(s * k / e * cfg.capacity_factor)))
 
     def route_group(xt):  # (S, d) -> (E, C, d), (S*k meta)
-        logits = nn.linear(p["router"], xt.astype(jnp.float32))  # (S, E)
+        logits = nn.linear(p["router"], xt.astype(jnp.float32), policy=policy)  # (S, E)
         probs = jax.nn.softmax(logits, axis=-1)
         top_p, top_e = jax.lax.top_k(probs, k)  # (S, k)
         top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)

@@ -1,38 +1,59 @@
 """Minimal functional NN utilities (no flax): params are plain dicts of arrays.
 
-Every dense layer routes through `linear(...)`, which honours the module-level
-quant mode — the paper's C4 (SC W16A16) exposed to all architectures:
+Every dense layer routes through `linear(...)`, which takes the numeric /
+backend decision as an explicit `ExecutionPolicy` — the paper's C4 (SC
+W16A16) exposed to all architectures with no hidden state:
 
-    with quant_mode("sc_w16a16"):  # or configure per-model
-        y = nn.linear(params, x)
+    policy = ExecutionPolicy(quant="sc_w16a16")
+    y = nn.linear(params, x, policy=policy)
+
+`policy=None` (the default) is the float path.  The quantized path goes
+through the kernel registry (`kernels/sc_matmul`) exactly like the FPS and
+lattice kernels, honouring `policy.backend` / `policy.interpret`.
 """
 
 from __future__ import annotations
 
 import contextlib
-import threading
+import warnings
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.quant import quantized_linear
-
-_STATE = threading.local()
-
-
-def current_quant_mode() -> str:
-    return getattr(_STATE, "mode", "none")
+from repro.core.policy import ExecutionPolicy
+from repro.kernels.sc_matmul.ops import sc_quantized_linear
 
 
 @contextlib.contextmanager
 def quant_mode(mode: str):
-    """'none' | 'sc_w16a16' | 'sc_w8a8' — applies to every linear() inside."""
-    prev = current_quant_mode()
-    _STATE.mode = mode
-    try:
-        yield
-    finally:
-        _STATE.mode = prev
+    """DEPRECATED, BEHAVIOR-CHANGING shim for the removed thread-local API.
+
+    This shim keeps legacy `with nn.quant_mode(...)` code importable and
+    callable for one release, but it CANNOT preserve the old semantics:
+    quantization is no longer applied implicitly, so a caller that ignores
+    the yielded value now gets FLOAT results where it used to get SC-CIM
+    quantized ones.  The yielded `ExecutionPolicy` must be passed onward:
+
+        with nn.quant_mode("sc_w16a16") as policy:   # deprecated
+            y = nn.linear(params, x, policy=policy)
+
+    New code should construct an `ExecutionPolicy` directly (or use
+    `PC2IMAccelerator`, which owns one policy for the whole pipeline).
+    Will be removed one release after the ExecutionPolicy API landed.
+    """
+    # FutureWarning (shown by default, unlike DeprecationWarning): legacy
+    # callers that ignore the yielded policy now get FLOAT math — that
+    # numeric change must be loud, not filtered.
+    warnings.warn(
+        "nn.quant_mode no longer applies quantization implicitly: linears "
+        "run the SC path ONLY where the yielded ExecutionPolicy is passed, "
+        "e.g. `with nn.quant_mode(m) as pol: nn.linear(p, x, policy=pol)`. "
+        "Callers that ignore the yielded value get float results. Construct "
+        "an ExecutionPolicy explicitly instead (repro.core.policy).",
+        FutureWarning,
+        stacklevel=3,
+    )
+    yield ExecutionPolicy(quant=mode)
 
 
 def linear_init(key, d_in: int, d_out: int, *, bias: bool = True, scale: float | None = None, dtype=jnp.float32):
@@ -44,16 +65,17 @@ def linear_init(key, d_in: int, d_out: int, *, bias: bool = True, scale: float |
     return p
 
 
-def linear(p, x: jax.Array) -> jax.Array:
-    mode = current_quant_mode()
-    if mode == "none":
+def linear(p, x: jax.Array, policy: ExecutionPolicy | None = None) -> jax.Array:
+    """Dense layer.  policy=None or policy.quant="none": float matmul;
+    otherwise the SC-CIM integer path via the kernel registry."""
+    bits = None if policy is None else policy.quant_bits
+    if bits is None:
         y = x @ p["w"]
-    elif mode == "sc_w16a16":
-        y = quantized_linear(x, p["w"], bits=16).astype(x.dtype)
-    elif mode == "sc_w8a8":
-        y = quantized_linear(x, p["w"], bits=8).astype(x.dtype)
     else:
-        raise ValueError(f"unknown quant mode {mode!r}")
+        y = sc_quantized_linear(
+            x, p["w"], bits=bits,
+            backend=policy.resolved_backend(), interpret=policy.interpret,
+        ).astype(x.dtype)
     if "b" in p:
         y = y + p["b"]
     return y
@@ -85,10 +107,12 @@ def mlp_init(key, channels: list[int], *, bias: bool = True, norm: bool = True, 
     return {"layers": layers}
 
 
-def mlp_apply(p, x: jax.Array, *, final_act: bool = True) -> jax.Array:
+def mlp_apply(
+    p, x: jax.Array, *, final_act: bool = True, policy: ExecutionPolicy | None = None
+) -> jax.Array:
     n = len(p["layers"])
     for i, lay in enumerate(p["layers"]):
-        x = linear(lay["lin"], x)
+        x = linear(lay["lin"], x, policy=policy)
         if "ln" in lay:
             x = layernorm(lay["ln"], x)
         if final_act or i < n - 1:

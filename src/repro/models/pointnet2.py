@@ -8,7 +8,8 @@ PC2IM switches, all config-selectable (benchmarked in fig12a/fig13):
   preproc    : "baseline1" (global L2 FPS + ball)  |  "baseline2" (grid tiles)
                | "pc2im" (MSP + L1 FPS + lattice query)
   aggregation: "standard" (group->mlp->pool) | "delayed" (mlp->group->pool, C5)
-  quant      : "none" | "sc_w16a16" (C4; applies to every MLP linear)
+  quant      : "none" | "sc_w16a16" (C4; applies to every MLP linear via the
+               ExecutionPolicy threaded through forward — see core/policy.py)
 
 Note on delayed aggregation: standard SA feeds the MLP relative coordinates
 (neighbour - centroid), which cannot be precomputed per point.  Following
@@ -27,6 +28,7 @@ import jax.numpy as jnp
 from repro.core import grouping as G
 from repro.core import query as Q
 from repro.core.engine import EngineConfig, clamp_depth, get_engine
+from repro.core.policy import ExecutionPolicy, resolve_policy
 from repro.models import nn
 
 
@@ -91,8 +93,18 @@ def init_params(key, cfg: PointNet2Config):
     return params
 
 
-def _stage_engine(cfg: PointNet2Config, sa: SAConfig, n_points: int):
-    """Batched PreprocessEngine for one SA stage (cached per distinct config)."""
+def stage_engine(
+    cfg: PointNet2Config, sa: SAConfig, n_points: int,
+    policy: ExecutionPolicy | None = None,
+):
+    """Batched PreprocessEngine for one SA stage (cached per distinct config).
+
+    The policy's backend/interpret flags participate in the engine identity,
+    so preprocessing and the SC feature path always run under the SAME
+    backend decision (the old API let them drift apart).  A policy with
+    backend=None defers to the config's pinned preproc_backend."""
+    policy = resolve_policy(cfg, policy)
+    backend = policy.backend
     if cfg.preproc == "pc2im":
         ec = EngineConfig(
             pipeline="pc2im",
@@ -100,7 +112,8 @@ def _stage_engine(cfg: PointNet2Config, sa: SAConfig, n_points: int):
             radius=sa.radius,
             nsample=sa.nsample,
             depth=clamp_depth(n_points, sa.n_centroids, cfg.msp_depth),
-            backend=cfg.preproc_backend,
+            backend=backend,
+            interpret=policy.interpret,
         )
     else:
         ec = EngineConfig(
@@ -108,24 +121,25 @@ def _stage_engine(cfg: PointNet2Config, sa: SAConfig, n_points: int):
             n_centroids=sa.n_centroids,
             radius=sa.radius,
             nsample=sa.nsample,
-            backend=cfg.preproc_backend,
+            backend=backend,
+            interpret=policy.interpret,
         )
     return get_engine(ec)
 
 
-def _sa_stage(cfg, sa_cfg, mlp_params, xyz, feats):
+def _sa_stage(cfg, sa_cfg, mlp_params, xyz, feats, policy):
     """One BATCHED set-abstraction stage.  xyz (B, N, 3), feats (B, N, C)|None.
 
     Preprocessing runs through the PreprocessEngine (batch and MSP tiles fold
     into one kernel grid); the per-point MLP applies batch-wide (it is
     leading-dim agnostic); only the index gathers vmap over clouds.
     """
-    res = _stage_engine(cfg, sa_cfg, xyz.shape[1])(xyz)
+    res = stage_engine(cfg, sa_cfg, xyz.shape[1], policy)(xyz)
     nbrs = res.neighbors
     if cfg.aggregation == "delayed":
         # C5: per-POINT mlp on [abs-xyz, feats], then gather + masked maxpool
         x = xyz if feats is None else jnp.concatenate([xyz, feats], axis=-1)
-        pointwise = nn.mlp_apply(mlp_params, x)  # (B, N, C')
+        pointwise = nn.mlp_apply(mlp_params, x, policy=policy)  # (B, N, C')
         grouped = jax.vmap(G.group_features)(pointwise, nbrs)  # (B, M, S, C')
         new_feats = G.masked_maxpool(grouped, nbrs.mask)
     else:
@@ -135,17 +149,28 @@ def _sa_stage(cfg, sa_cfg, mlp_params, xyz, feats):
         else:
             gf = jax.vmap(G.group_features)(feats, nbrs)  # (B, M, S, C)
             grouped = jnp.concatenate([rel, gf], axis=-1)
-        new_feats = G.masked_maxpool(nn.mlp_apply(mlp_params, grouped), nbrs.mask)
+        new_feats = G.masked_maxpool(
+            nn.mlp_apply(mlp_params, grouped, policy=policy), nbrs.mask
+        )
     return res.centroid_xyz, new_feats
 
 
-def forward(params, cfg: PointNet2Config, points: jax.Array) -> jax.Array:
-    """Batched forward.  points: (B, N, 3+F) -> (B, C) or (B, N, C)."""
-    with nn.quant_mode(cfg.quant):
-        return _forward_batched(params, cfg, points)
+def forward(
+    params, cfg: PointNet2Config, points: jax.Array,
+    policy: ExecutionPolicy | None = None,
+) -> jax.Array:
+    """Batched forward.  points: (B, N, 3+F) -> (B, C) or (B, N, C).
+
+    policy=None derives the config's default ExecutionPolicy; pass one
+    explicitly (or use core.accelerator.PC2IMAccelerator) to select the
+    quant mode / kernel backend without touching the config.  Resolution
+    happens HERE, once: a backend=None policy picks up the config's pinned
+    backend for the preprocessing engines AND the SC feature path."""
+    policy = resolve_policy(cfg, policy)
+    return _forward_batched(params, cfg, points, policy)
 
 
-def _forward_batched(params, cfg: PointNet2Config, points: jax.Array):
+def _forward_batched(params, cfg: PointNet2Config, points: jax.Array, policy):
     """points: (B, N, 3 + in_features) -> logits (cls: (B,C), seg: (B,N,C))."""
     xyz = points[..., :3]
     feats = points[..., 3:] if cfg.in_features else None
@@ -153,14 +178,14 @@ def _forward_batched(params, cfg: PointNet2Config, points: jax.Array):
     levels = [(xyz, feats)]
     for sa_cfg, mlp_p in zip(cfg.sa, params["sa"]):
         xyz_i, feats_i = levels[-1]
-        levels.append(_sa_stage(cfg, sa_cfg, mlp_p, xyz_i, feats_i))
+        levels.append(_sa_stage(cfg, sa_cfg, mlp_p, xyz_i, feats_i, policy))
 
     if cfg.task == "cls":
         xyz_l, feats_l = levels[-1]
         x = jnp.concatenate([xyz_l, feats_l], axis=-1)  # (B, M, C)
-        x = nn.mlp_apply(params["global"], x)
+        x = nn.mlp_apply(params["global"], x, policy=policy)
         x = jnp.max(x, axis=1)  # global max pool per cloud
-        return nn.mlp_apply(params["head"], x, final_act=False)
+        return nn.mlp_apply(params["head"], x, final_act=False, policy=policy)
 
     # segmentation: FP stages walk the pyramid back from coarse to fine.
     # Skip channels (mirrors init_params): intermediate levels contribute
@@ -177,13 +202,16 @@ def _forward_batched(params, cfg: PointNet2Config, points: jax.Array):
         else:
             skip = fine_f
         x = jnp.concatenate([interp, skip], axis=-1)
-        coarse_f = nn.mlp_apply(fp_p, x)
+        coarse_f = nn.mlp_apply(fp_p, x, policy=policy)
         coarse_xyz = fine_xyz
-    return nn.mlp_apply(params["head"], coarse_f, final_act=False)
+    return nn.mlp_apply(params["head"], coarse_f, final_act=False, policy=policy)
 
 
-def loss_fn(params, cfg: PointNet2Config, points: jax.Array, labels: jax.Array):
-    logits = forward(params, cfg, points)
+def loss_fn(
+    params, cfg: PointNet2Config, points: jax.Array, labels: jax.Array,
+    policy: ExecutionPolicy | None = None,
+):
+    logits = forward(params, cfg, points, policy=policy)
     logp = jax.nn.log_softmax(logits, axis=-1)
     if cfg.task == "cls":
         nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1).mean()

@@ -58,13 +58,12 @@ def _lru_scan(x: jax.Array, a: jax.Array) -> jax.Array:
     return b_s
 
 
-def rglru_apply(p, cfg, x: jax.Array, cache: LRUCache | None = None):
+def rglru_apply(p, cfg, x: jax.Array, cache: LRUCache | None = None, policy=None):
     """x: (B, S, d_model) -> (out, new_cache).  Griffin recurrent block."""
     b, s, _ = x.shape
-    w = cfg.lru_width or cfg.d_model
 
-    gate_branch = jax.nn.gelu(nn.linear(p["in_y"], x))  # (B, S, W)
-    u = nn.linear(p["in_x"], x)  # (B, S, W)
+    gate_branch = jax.nn.gelu(nn.linear(p["in_y"], x, policy=policy))  # (B, S, W)
+    u = nn.linear(p["in_x"], x, policy=policy)  # (B, S, W)
 
     # short causal conv (width 4, depthwise)
     if cache is None:
@@ -84,8 +83,8 @@ def rglru_apply(p, cfg, x: jax.Array, cache: LRUCache | None = None):
 
     # RG-LRU core (f32 for the recurrence)
     ucf = uc.astype(jnp.float32)
-    r = jax.nn.sigmoid(nn.linear(p["gate_a"], uc).astype(jnp.float32))
-    i = jax.nn.sigmoid(nn.linear(p["gate_x"], uc).astype(jnp.float32))
+    r = jax.nn.sigmoid(nn.linear(p["gate_a"], uc, policy=policy).astype(jnp.float32))
+    i = jax.nn.sigmoid(nn.linear(p["gate_x"], uc, policy=policy).astype(jnp.float32))
     log_a_base = jax.nn.log_sigmoid(p["lam"])[None, None, :]  # (1,1,W)
     log_a = _C * r * log_a_base
     a = jnp.exp(log_a)
@@ -99,5 +98,5 @@ def rglru_apply(p, cfg, x: jax.Array, cache: LRUCache | None = None):
         new_cache = LRUCache(h=h, conv=conv_tail)
         h = h[:, None]
 
-    out = nn.linear(p["out"], (h.astype(x.dtype) * gate_branch))
+    out = nn.linear(p["out"], (h.astype(x.dtype) * gate_branch), policy=policy)
     return out, new_cache

@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.core.policy import ExecutionPolicy, resolve_policy
 from repro.models import nn
 from repro.models.layers import (
     AttnConfig,
@@ -77,12 +78,12 @@ def _mlp_init(cfg: ModelConfig, key, dtype):
     return dense_mlp_init(key, cfg.d_model, cfg.d_ff, bias=cfg.use_bias, dtype=dtype)
 
 
-def _mlp_apply(cfg: ModelConfig, p, x):
+def _mlp_apply(cfg: ModelConfig, p, x, policy: ExecutionPolicy | None = None):
     if cfg.family == "moe":
-        return moe_apply(p, cfg, x)
+        return moe_apply(p, cfg, x, policy=policy)
     if cfg.mlp_kind == "glu":
-        return glu_mlp_apply(p, x, act=cfg.act)
-    return dense_mlp_apply(p, x, act=cfg.act)
+        return glu_mlp_apply(p, x, act=cfg.act, policy=policy)
+    return dense_mlp_apply(p, x, act=cfg.act, policy=policy)
 
 
 def _slot_init(cfg: ModelConfig, key, slot_type: str, dtype):
@@ -132,6 +133,7 @@ def init_lm(key, cfg: ModelConfig):
 def _block_apply(
     cfg, slot_type, p, h, *, positions,
     cache=None, write_idx=None, attend_len=None, decode_window=None, collect_kv=False,
+    policy: ExecutionPolicy | None = None,
 ):
     a, aux = attn_apply(
         p["attn"],
@@ -144,12 +146,15 @@ def _block_apply(
         decode_window=decode_window,
         collect_kv=collect_kv,
         attn_block=cfg.attn_block,
+        policy=policy,
     )
     # constrain the row-parallel partial-sum OUTPUTS to the seq-sharded
     # layout: GSPMD emits reduce-scatter instead of all-reduce (half the
     # collective volume — §Perf cell-A iteration 4)
     h = h + hint_residual(a)
-    h = h + hint_residual(_mlp_apply(cfg, p["mlp"], _norm_apply(cfg, p["ln2"], h)))
+    h = h + hint_residual(
+        _mlp_apply(cfg, p["mlp"], _norm_apply(cfg, p["ln2"], h), policy=policy)
+    )
     return h, aux
 
 
@@ -162,12 +167,17 @@ def _maybe_remat(cfg: ModelConfig, fn):
     return jax.checkpoint(fn, policy=policy)
 
 
-def backbone(params, cfg: ModelConfig, h: jax.Array, positions: jax.Array) -> jax.Array:
+def backbone(
+    params, cfg: ModelConfig, h: jax.Array, positions: jax.Array,
+    policy: ExecutionPolicy | None = None,
+) -> jax.Array:
     """Run the layer stack (train/prefill without cache).  h: (B, S, D)."""
 
     def group_body(hh, group_params):
         for s, slot_type in enumerate(cfg.layer_pattern):
-            hh, _ = _block_apply(cfg, slot_type, group_params[s], hh, positions=positions)
+            hh, _ = _block_apply(
+                cfg, slot_type, group_params[s], hh, positions=positions, policy=policy
+            )
             hh = hint_residual(hh)
         return hh, None
 
@@ -218,16 +228,18 @@ def chunked_cross_entropy(
     return nll_sum / jnp.maximum(cnt, 1.0)
 
 
-def lm_loss(params, cfg: ModelConfig, batch: dict) -> tuple[jax.Array, dict]:
+def lm_loss(
+    params, cfg: ModelConfig, batch: dict, policy: ExecutionPolicy | None = None
+) -> tuple[jax.Array, dict]:
     """batch: {tokens (B,S), labels (B,S)} -> (loss, metrics)."""
+    policy = resolve_policy(cfg, policy)
     tokens = batch["tokens"]
     b, s = tokens.shape
-    with nn.quant_mode(cfg.quant):
-        h = embed_tokens(params, cfg, tokens)
-        h = backbone(params, cfg, h, jnp.arange(s)[None, :])
-        loss = chunked_cross_entropy(
-            h, lm_head_weights(params, cfg), batch["labels"], chunk=cfg.loss_chunk
-        )
+    h = embed_tokens(params, cfg, tokens)
+    h = backbone(params, cfg, h, jnp.arange(s)[None, :], policy=policy)
+    loss = chunked_cross_entropy(
+        h, lm_head_weights(params, cfg), batch["labels"], chunk=cfg.loss_chunk
+    )
     return loss, {"loss": loss}
 
 
@@ -258,28 +270,31 @@ def init_decode_state(cfg: ModelConfig, batch: int, s_max: int) -> DecodeState:
     return DecodeState(caches=tuple(caches), cache_len=jnp.zeros((), jnp.int32))
 
 
-def prefill(params, cfg: ModelConfig, tokens: jax.Array, s_max: int | None = None):
+def prefill(
+    params, cfg: ModelConfig, tokens: jax.Array, s_max: int | None = None,
+    policy: ExecutionPolicy | None = None,
+):
     """Prefill: run the stack, return (last-position logits, DecodeState)."""
+    policy = resolve_policy(cfg, policy)
     b, s = tokens.shape
     s_max = s_max or s
     positions = jnp.arange(s)[None, :]
-    with nn.quant_mode(cfg.quant):
-        h = embed_tokens(params, cfg, tokens)
+    h = embed_tokens(params, cfg, tokens)
 
-        def group_body(hh, group_params):
-            kvs = []
-            for slot, slot_type in enumerate(cfg.layer_pattern):
-                hh, kv = _block_apply(
-                    cfg, slot_type, group_params[slot], hh,
-                    positions=positions, collect_kv=True,
-                )
-                hh = hint_residual(hh)
-                kvs.append(KVCache(*kv))
-            return hh, tuple(kvs)
+    def group_body(hh, group_params):
+        kvs = []
+        for slot, slot_type in enumerate(cfg.layer_pattern):
+            hh, kv = _block_apply(
+                cfg, slot_type, group_params[slot], hh,
+                positions=positions, collect_kv=True, policy=policy,
+            )
+            hh = hint_residual(hh)
+            kvs.append(KVCache(*kv))
+        return hh, tuple(kvs)
 
-        h, kv_stacked = jax.lax.scan(_maybe_remat(cfg, group_body), h, tuple(params["blocks"]))
-        h = _norm_apply(cfg, params["final_norm"], h)
-        logits = (h[:, -1:] @ lm_head_weights(params, cfg)).astype(jnp.float32)
+    h, kv_stacked = jax.lax.scan(_maybe_remat(cfg, group_body), h, tuple(params["blocks"]))
+    h = _norm_apply(cfg, params["final_norm"], h)
+    logits = (h[:, -1:] @ lm_head_weights(params, cfg)).astype(jnp.float32)
 
     # pad caches out to s_max; rolling local windows keep the last `window`
     # entries, rolled so position p sits at slot p % s_eff (decode invariant)
@@ -304,40 +319,43 @@ def prefill(params, cfg: ModelConfig, tokens: jax.Array, s_max: int | None = Non
     return logits, DecodeState(caches=tuple(caches), cache_len=jnp.full((), s, jnp.int32))
 
 
-def decode_step(params, cfg: ModelConfig, state: DecodeState, token: jax.Array):
+def decode_step(
+    params, cfg: ModelConfig, state: DecodeState, token: jax.Array,
+    policy: ExecutionPolicy | None = None,
+):
     """One decode step.  token: (B, 1) int32 -> (logits (B,1,V) f32, new state)."""
-    b = token.shape[0]
+    policy = resolve_policy(cfg, policy)
     pos = state.cache_len.reshape(1, 1).astype(jnp.int32)
-    with nn.quant_mode(cfg.quant):
-        h = embed_tokens(params, cfg, token)
+    h = embed_tokens(params, cfg, token)
 
-        def group_body(hh, xs):
-            group_params = xs[0]
-            caches = xs[1:]
-            new_caches = []
-            cl = state.cache_len
-            for slot, slot_type in enumerate(cfg.layer_pattern):
-                cache = caches[slot]
-                if slot_type == "local" and cfg.window:
-                    # rolling window buffer: write at pos % w; all min(pos+1, w)
-                    # entries valid (window bound enforced by buffer size)
-                    s_eff = cache.k.shape[1]
-                    hh, nc = _block_apply(
-                        cfg, slot_type, group_params[slot], hh, positions=pos,
-                        cache=cache, write_idx=jnp.mod(cl, s_eff),
-                        attend_len=jnp.minimum(cl + 1, s_eff), decode_window=None,
-                    )
-                else:
-                    hh, nc = _block_apply(
-                        cfg, slot_type, group_params[slot], hh, positions=pos,
-                        cache=cache, write_idx=cl, attend_len=cl + 1,
-                    )
-                new_caches.append(nc)
-            return hh, tuple(new_caches)
+    def group_body(hh, xs):
+        group_params = xs[0]
+        caches = xs[1:]
+        new_caches = []
+        cl = state.cache_len
+        for slot, slot_type in enumerate(cfg.layer_pattern):
+            cache = caches[slot]
+            if slot_type == "local" and cfg.window:
+                # rolling window buffer: write at pos % w; all min(pos+1, w)
+                # entries valid (window bound enforced by buffer size)
+                s_eff = cache.k.shape[1]
+                hh, nc = _block_apply(
+                    cfg, slot_type, group_params[slot], hh, positions=pos,
+                    cache=cache, write_idx=jnp.mod(cl, s_eff),
+                    attend_len=jnp.minimum(cl + 1, s_eff), decode_window=None,
+                    policy=policy,
+                )
+            else:
+                hh, nc = _block_apply(
+                    cfg, slot_type, group_params[slot], hh, positions=pos,
+                    cache=cache, write_idx=cl, attend_len=cl + 1, policy=policy,
+                )
+            new_caches.append(nc)
+        return hh, tuple(new_caches)
 
-        h, new_caches = jax.lax.scan(
-            group_body, h, (tuple(params["blocks"]), *state.caches)
-        )
-        h = _norm_apply(cfg, params["final_norm"], h)
-        logits = (h @ lm_head_weights(params, cfg)).astype(jnp.float32)
+    h, new_caches = jax.lax.scan(
+        group_body, h, (tuple(params["blocks"]), *state.caches)
+    )
+    h = _norm_apply(cfg, params["final_norm"], h)
+    logits = (h @ lm_head_weights(params, cfg)).astype(jnp.float32)
     return logits, DecodeState(caches=tuple(new_caches), cache_len=state.cache_len + 1)

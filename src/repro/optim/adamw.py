@@ -22,7 +22,9 @@ class AdamWState(NamedTuple):
 
 
 def adamw_init(params, *, keep_master: bool | None = None) -> AdamWState:
-    f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    def f32(p):
+        return jnp.zeros(p.shape, jnp.float32)
+
     mu = jax.tree.map(f32, params)
     nu = jax.tree.map(f32, params)
     if keep_master is None:

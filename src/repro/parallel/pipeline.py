@@ -13,7 +13,6 @@ execution order changes.
 
 from __future__ import annotations
 
-import functools
 from typing import Callable
 
 import jax

@@ -1,8 +1,8 @@
 """Batched point-cloud inference — ragged requests onto static engine shapes.
 
 Serving traffic arrives as clouds of arbitrary size in arbitrary batches;
-the PreprocessEngine (and everything jitted behind it) wants a fixed
-(B, N, 3+F).  This module is the adapter:
+the PC2IMAccelerator artifact (and everything jitted behind it) wants a
+fixed (B, N, 3+F).  This module is the adapter:
 
   * clouds smaller than cfg.n_points are padded by repeating the last point
     (duplicates collapse to one FPS candidate, the standard convention);
@@ -11,17 +11,20 @@ the PreprocessEngine (and everything jitted behind it) wants a fixed
   * partial batches are zero-padded to `batch_size` and the filler rows
     dropped from the output.
 
-One jit-compiled `infer` artifact serves every request shape.
+One `PC2IMAccelerator` (config + ExecutionPolicy -> compiled artifact)
+serves every request shape; pass a policy to serve quantized (SC W16A16)
+without touching the config, safely per-thread.
 """
 
 from __future__ import annotations
 
 import dataclasses
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.accelerator import get_accelerator
+from repro.core.policy import ExecutionPolicy
 from repro.models import pointnet2 as PN
 
 
@@ -53,27 +56,30 @@ def subsample_indices(n: int, n_points: int) -> np.ndarray:
 
 
 def make_pointcloud_serve_fns(
-    cfg: PN.PointNet2Config, serve_cfg: PointCloudServeConfig | None = None
+    cfg: PN.PointNet2Config,
+    serve_cfg: PointCloudServeConfig | None = None,
+    policy: ExecutionPolicy | None = None,
 ):
     """Serving closures for a PointNet2 config.
 
-    Returns {"infer", "serve_batch"}:
-      infer(params, points)       — jitted batched step on the static
-                                    (batch_size, n_points, 3+F) shape.
+    Returns {"infer", "serve_batch", "accelerator"}:
+      infer(params, points)       — the accelerator's compiled batched step
+                                    on the static (batch_size, n_points, 3+F)
+                                    shape.
       serve_batch(params, clouds) — ragged entry point: list of (n_i, 3+F)
                                     numpy clouds -> list of per-cloud logits
                                     (cls: (C,); seg: (n_i, C) — padding rows
                                     dropped, and oversized clouds mapped back
                                     to all n_i points via nearest sampled
                                     point, so row j scores input point j).
+      accelerator                 — the underlying PC2IMAccelerator (one
+                                    compiled artifact per (cfg, policy)).
     """
     scfg = serve_cfg or PointCloudServeConfig()
     b, n = scfg.batch_size, cfg.n_points
     width = 3 + cfg.in_features
-
-    @jax.jit
-    def infer(params, points: jax.Array) -> jax.Array:
-        return PN.forward(params, cfg, points)
+    accel = get_accelerator(cfg, policy)
+    infer = accel.infer
 
     def serve_batch(params, clouds: list[np.ndarray]) -> list[np.ndarray]:
         out: list[np.ndarray] = []
@@ -94,4 +100,4 @@ def make_pointcloud_serve_fns(
                     out.append(logits[i, inv])
         return out
 
-    return {"infer": infer, "serve_batch": serve_batch}
+    return {"infer": infer, "serve_batch": serve_batch, "accelerator": accel}

@@ -1,24 +1,30 @@
-"""Serving steps: prefill + batched greedy/sampled decode."""
+"""Serving steps: prefill + batched greedy/sampled decode.
+
+`make_serve_fns(cfg, policy=...)` pins every step to one ExecutionPolicy
+(quant mode / kernel backend); policy=None uses the config's default.
+Policies are plain arguments — concurrent servers with different policies
+share nothing."""
 
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.core.policy import ExecutionPolicy, resolve_policy
 from repro.models.families import get_family_api
 
 
-def make_serve_fns(cfg: ModelConfig):
+def make_serve_fns(cfg: ModelConfig, policy: ExecutionPolicy | None = None):
     api = get_family_api(cfg)
+    policy = resolve_policy(cfg, policy)
 
     def prefill_step(params, batch, s_max: int):
-        return api["prefill"](params, cfg, batch, s_max)
+        return api["prefill"](params, cfg, batch, s_max, policy=policy)
 
     def decode_step(params, state, batch):
         """One token for the whole batch; greedy next token included so the
         lowered artifact covers the sampling epilogue."""
-        logits, state = api["decode_step"](params, cfg, state, batch)
+        logits, state = api["decode_step"](params, cfg, state, batch, policy=policy)
         next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
         return logits, next_tok, state
 

@@ -7,6 +7,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.core.policy import ExecutionPolicy, resolve_policy
 from repro.models.families import get_family_api
 from repro.optim.adamw import adamw_update
 from repro.optim.schedule import cosine_warmup_schedule
@@ -22,15 +23,19 @@ def make_train_step(
     microbatch: int | None = None,
     b1: float = 0.9,
     b2: float = 0.95,
+    policy: ExecutionPolicy | None = None,
 ):
     """Returns train_step(params, opt_state, batch) -> (params, opt_state, metrics).
 
     microbatch: split the batch into `microbatch` sequential chunks and
-    accumulate grads (memory/throughput knob for §Perf)."""
+    accumulate grads (memory/throughput knob for §Perf).
+    policy: ExecutionPolicy pinning quant mode / kernel backend for the whole
+    step (None -> the config's default)."""
     api = get_family_api(cfg)
+    policy = resolve_policy(cfg, policy)
 
     def loss_fn(params, batch):
-        return api["train_loss"](params, cfg, batch)
+        return api["train_loss"](params, cfg, batch, policy=policy)
 
     def compute_grads(params, batch):
         if microbatch is None or microbatch <= 1:

@@ -22,9 +22,10 @@ except ImportError:  # degrade: property tests skip, the rest of the module runs
 
     def given(*_args, **_kwargs):
         def deco(fn):
-            # plain zero-arg function (not a wraps/lambda): pytest collects it
-            # by the original name and reports an explicit skip
-            def skipped():
+            # plain function (not a wraps/lambda): pytest collects it by the
+            # original name and reports an explicit skip; *_a absorbs `self`
+            # so class-based property tests degrade too
+            def skipped(*_a, **_k):
                 pytest.skip("hypothesis not installed")
 
             skipped.__name__ = fn.__name__

@@ -52,7 +52,9 @@ class TestEnergyModel:
         assert reds[0] < reds[1] < reds[2]
 
     def test_fom_ratios(self):
-        f = lambda scr, s: E.sccim_fom(scr, s)["fom2"]
+        def f(scr, s):
+            return E.sccim_fom(scr, s)["fom2"]
+
         r_bs_8 = f(8, "sc_cim") / f(8, "bs_cim")
         r_bt_8 = f(8, "sc_cim") / f(8, "bt_cim")
         assert abs(r_bs_8 - 5.2) < 0.3 and abs(r_bt_8 - 2.0) < 0.2
@@ -126,7 +128,9 @@ class TestGrouping:
     def test_delayed_equals_standard_for_linear_mlp(self):
         """C5 exactness: with a LINEAR mlp, delayed aggregation == standard."""
         w = jax.random.normal(jax.random.PRNGKey(0), (2, 4))
-        mlp = lambda x: x @ w
+        def mlp(x):
+            return x @ w
+
         feats = jax.random.normal(jax.random.PRNGKey(1), (5, 2))
         nbrs = self._nbrs()
         a = G.aggregate_standard(feats, nbrs, mlp)

@@ -115,6 +115,14 @@ class TestEngineValidation:
         with pytest.raises(ValueError):
             eng(jnp.zeros((4, 64, 2)))
 
+    @pytest.mark.parametrize("width", [2, 4, 6])
+    def test_single_cloud_bad_width_raises(self, width):
+        """Regression: the 2-D promotion branch used to accept (N, F != 3)
+        silently, preprocessing feature columns as coordinates."""
+        eng = PreprocessEngine(EngineConfig(pipeline="baseline1", n_centroids=8))
+        with pytest.raises(ValueError, match="got"):
+            eng(jnp.zeros((64, width)))
+
     def test_clamp_depth(self):
         assert clamp_depth(1024, 128, 3) == 3
         assert clamp_depth(64, 16, 3) == 3  # 8-pt tiles, 2 samples each: ok

@@ -56,8 +56,12 @@ def test_backward_matches_dense(case):
     q = jax.random.normal(jax.random.fold_in(key, 1), (1, case["s"], case["hq"], 16))
     k = jax.random.normal(jax.random.fold_in(key, 2), (1, case["sk"], case["hkv"], 16))
     v = jax.random.normal(jax.random.fold_in(key, 3), (1, case["sk"], case["hkv"], 16))
-    f = lambda *a: flash_attention(*a, causal=case["causal"], window=case["window"], block=16).sum()
-    r = lambda *a: dense_ref(*a, case["causal"], case["window"]).sum()
+    def f(*a):
+        return flash_attention(*a, causal=case["causal"], window=case["window"], block=16).sum()
+
+    def r(*a):
+        return dense_ref(*a, case["causal"], case["window"]).sum()
+
     gf = jax.grad(f, argnums=(0, 1, 2))(q, k, v)
     gr = jax.grad(r, argnums=(0, 1, 2))(q, k, v)
     for a, b in zip(gf, gr):

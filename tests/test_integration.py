@@ -6,7 +6,6 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs.base import get_config
 from repro.data.tokens import token_stream
@@ -72,7 +71,6 @@ class TestLMTraining:
         # uninterrupted 10 steps
         full = run(0)
         # interrupted at 5 + checkpoint + resume
-        half = run(0)
         # rerun: first 5
         params = api["init"](jax.random.PRNGKey(0), cfg)
         state = {"params": params, "opt": adamw_init(params)}

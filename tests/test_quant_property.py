@@ -1,0 +1,99 @@
+"""Property tests for the SC-CIM quantized linear (`sc_quantized_linear`).
+
+The quant path previously had no direct coverage: these tests bound the
+w16a16 / w8a8 error against the f32 matmul across randomly drawn batched
+shapes (hypothesis; skipped gracefully when not installed), and pin the
+policy->backend piping — the Pallas (interpret) backend must agree with the
+XLA reference bit for bit, since `nn.linear` forwards
+`ExecutionPolicy.backend` straight into the registry dispatch.
+
+Error model: symmetric per-tensor quantization has elementwise error
+<= s/2 with s = max|.| / (2^(b-1) - 1), so the matmul's relative Frobenius
+error is O(2^-(b-1)) for well-conditioned random operands — we assert a
+conservative 10x slack on that (w16a16: 1e-3, w8a8: 5e-2).
+"""
+
+import jax
+import numpy as np
+import pytest
+from _hypothesis import given, settings, st
+
+from repro.core.policy import ExecutionPolicy
+from repro.kernels.sc_matmul.ops import sc_quantized_linear
+from repro.models import nn
+
+jax.config.update("jax_platform_name", "cpu")
+
+BOUNDS = {16: 1e-3, 8: 5e-2}
+
+
+def _rel_err(got, ref):
+    got, ref = np.asarray(got, np.float64), np.asarray(ref, np.float64)
+    return np.linalg.norm(got - ref) / max(np.linalg.norm(ref), 1e-12)
+
+
+def _operands(lead, k, n, seed, scale):
+    kx, kw = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(kx, tuple(lead) + (k,)) * scale
+    w = jax.random.normal(kw, (k, n))
+    return x, w
+
+
+class TestQuantErrorBounds:
+    @pytest.mark.parametrize("bits", [16, 8])
+    @pytest.mark.parametrize("lead", [(4,), (2, 3), (2, 2, 5)])
+    def test_error_bounded_fixed_shapes(self, bits, lead):
+        x, w = _operands(lead, 32, 16, seed=bits, scale=1.0)
+        got = sc_quantized_linear(x, w, bits=bits, backend="xla")
+        assert got.shape == tuple(lead) + (16,)
+        assert _rel_err(got, x @ w) < BOUNDS[bits]
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        b=st.integers(1, 6),
+        s=st.integers(1, 8),
+        k=st.integers(1, 48),
+        n=st.integers(1, 24),
+        bits=st.sampled_from([16, 8]),
+        seed=st.integers(0, 2**16),
+        log_scale=st.integers(-4, 4),
+    )
+    def test_error_bounded_property(self, b, s, k, n, bits, seed, log_scale):
+        """w16a16/w8a8 stay within their bound vs f32 matmul for arbitrary
+        batched shapes and operand magnitudes (scale invariance of the
+        symmetric per-tensor scheme)."""
+        x, w = _operands((b, s), k, n, seed=seed, scale=float(10.0**log_scale))
+        got = sc_quantized_linear(x, w, bits=bits, backend="xla")
+        assert got.shape == (b, s, n)
+        assert _rel_err(got, x @ w) < BOUNDS[bits]
+
+    @settings(max_examples=10, deadline=None)
+    @given(bits=st.sampled_from([16, 8]), seed=st.integers(0, 2**16))
+    def test_linear_policy_matches_op(self, bits, seed):
+        """nn.linear under a policy == calling the op directly with the
+        policy's backend/interpret — the piping adds nothing."""
+        x, w = _operands((3, 4), 16, 8, seed=seed, scale=1.0)
+        p = {"w": w}
+        mode = {16: "sc_w16a16", 8: "sc_w8a8"}[bits]
+        pol = ExecutionPolicy(quant=mode, backend="xla")
+        got = nn.linear(p, x, policy=pol)
+        ref = sc_quantized_linear(x, w, bits=bits, backend="xla").astype(x.dtype)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+class TestBackendPiping:
+    def test_pallas_interpret_matches_xla(self):
+        """The policy's backend reaches the registry: pallas (interpret on
+        CPU) and xla produce identical results for the same policy quant."""
+        x, w = _operands((4, 4), 32, 16, seed=3, scale=1.0)
+        p = {"w": w}
+        a = nn.linear(p, x, policy=ExecutionPolicy(quant="sc_w16a16", backend="xla"))
+        b = nn.linear(
+            p, x,
+            policy=ExecutionPolicy(quant="sc_w16a16", backend="pallas", interpret=True),
+        )
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6, atol=1e-6)
+
+    def test_bad_backend_rejected_at_policy(self):
+        with pytest.raises(ValueError):
+            ExecutionPolicy(quant="sc_w16a16", backend="rocm")

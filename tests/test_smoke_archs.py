@@ -4,7 +4,6 @@ The FULL configs are exercised only via the dry-run (no allocation)."""
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.configs.base import get_config

@@ -1,14 +1,11 @@
 """Deep correctness tests for the sequence-mixing recurrences:
 chunked SSD (mamba2) and RG-LRU vs naive sequential oracles."""
 
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 from _hypothesis import given, settings, st
 
-from repro.configs.base import get_config
 from repro.models.mamba2 import ssd_forward
 from repro.models.rglru import _lru_scan
 

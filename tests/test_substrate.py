@@ -23,7 +23,9 @@ jax.config.update("jax_platform_name", "cpu")
 class TestOptimizer:
     def _quad_setup(self):
         params = {"w": jnp.array([1.0, -2.0, 3.0]), "b": jnp.array(0.5)}
-        loss = lambda p: jnp.sum(p["w"] ** 2) + p["b"] ** 2
+        def loss(p):
+            return jnp.sum(p["w"] ** 2) + p["b"] ** 2
+
         return params, loss
 
     def test_adamw_descends(self):
