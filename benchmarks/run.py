@@ -8,11 +8,17 @@ Prints ``name,us_per_call,derived`` CSV:
 
 from __future__ import annotations
 
+import pathlib
 import sys
 import time
 
 import jax
 import jax.numpy as jnp
+
+# make `import benchmarks.*` work when invoked as `python benchmarks/run.py`
+_ROOT = str(pathlib.Path(__file__).resolve().parent.parent)
+if _ROOT not in sys.path:
+    sys.path.insert(0, _ROOT)
 
 
 def _timeit(fn, *args, iters: int = 5) -> float:
@@ -123,15 +129,33 @@ def accelerator_bench(b: int = 8) -> list[dict]:
     return rows
 
 
+def serve_bench(smoke: bool = False) -> list[dict]:
+    """Open-loop load benchmark: ServingRuntime vs naive per-request path
+    (see benchmarks/serve_load.py).  Rows: us = p95 latency, derived = note."""
+    from benchmarks import serve_load
+
+    return serve_load.run(smoke=smoke)
+
+
 def main() -> None:
     import importlib
+    import math
 
     steps = 0
+    smoke = "--smoke" in sys.argv[1:]
     for a in sys.argv[1:]:
         if a.startswith("--train-steps="):
             steps = int(a.split("=")[1])
 
     print("name,us_per_call,derived")
+    if smoke:
+        # CI lane: just the serving-runtime load benchmark, reduced size —
+        # keeps the open-loop path exercised on every push without the full
+        # paper-table sweep.
+        for row in serve_bench(smoke=True):
+            us = "" if math.isnan(row["us"]) else f"{row['us']:.1f}"
+            print(f"{row['name']},{us},{row['note']}")
+        return
     for mod_name, kwargs in [
         ("benchmarks.fig12b_preproc_energy", {}),
         ("benchmarks.fig12c_sccim_fom", {}),
@@ -152,6 +176,9 @@ def main() -> None:
         print(f"{row['name']},{row['us']:.1f},{row['derived']:.1f} clouds/s")
     for row in accelerator_bench():
         print(f"{row['name']},{row['us']:.1f},{row['derived']:.1f} clouds/s")
+    for row in serve_bench():
+        us = "" if math.isnan(row["us"]) else f"{row['us']:.1f}"
+        print(f"{row['name']},{us},{row['note']}")
 
 
 if __name__ == "__main__":

@@ -27,7 +27,8 @@ removed thread-local `nn.quant_mode`).
 
 from __future__ import annotations
 
-import functools
+import dataclasses
+import threading
 
 import jax
 
@@ -103,9 +104,31 @@ class PC2IMAccelerator:
         )
 
 
-@functools.lru_cache(maxsize=None)
-def _cached_accelerator(config, policy) -> PC2IMAccelerator:
-    return PC2IMAccelerator(config, policy)
+@dataclasses.dataclass(frozen=True)
+class CacheStats:
+    """Snapshot of the accelerator cache (see `cache_stats`).
+
+    hits/misses count `get_accelerator` calls; size is the number of live
+    artifacts; keys names each artifact as (config.name, quant, backend) so
+    tests and the serving runtime can assert one-artifact-per-(config,
+    policy) and detect compile storms under concurrent traffic.
+    """
+
+    hits: int
+    misses: int
+    size: int
+    keys: tuple[tuple[str, str, str | None], ...]
+
+
+# Explicit dict cache (not lru_cache): the serving runtime calls
+# get_accelerator from many replica/scheduler threads at once, and a bare
+# lru_cache lets two concurrent misses BOTH construct (and later jit) an
+# accelerator — a compile storm under traffic.  The lock serialises
+# construction only; compiled infer/forward calls never take it.
+_lock = threading.Lock()
+_artifacts: dict[tuple, PC2IMAccelerator] = {}
+_hits = 0
+_misses = 0
 
 
 def get_accelerator(
@@ -116,6 +139,38 @@ def get_accelerator(
     The policy is resolved against the config BEFORE keying the cache, so
     `get_accelerator(cfg)`, `get_accelerator(cfg, policy_for(cfg))` and a
     backend=None policy that resolves to the same concrete backend all share
-    one artifact.
+    one artifact.  Thread-safe: concurrent callers with the same key always
+    receive the same instance.
     """
-    return _cached_accelerator(config, resolve_policy(config, policy))
+    global _hits, _misses
+    key = (config, resolve_policy(config, policy))
+    with _lock:
+        accel = _artifacts.get(key)
+        if accel is None:
+            _misses += 1
+            accel = _artifacts[key] = PC2IMAccelerator(*key)
+        else:
+            _hits += 1
+        return accel
+
+
+def cache_stats() -> CacheStats:
+    """Introspect the accelerator cache (hit/miss counters + live keys)."""
+    with _lock:
+        keys = tuple(
+            (cfg.name, pol.quant, pol.backend) for cfg, pol in _artifacts
+        )
+        return CacheStats(hits=_hits, misses=_misses, size=len(_artifacts), keys=keys)
+
+
+def clear_cache() -> None:
+    """Drop every cached accelerator and reset the hit/miss counters.
+
+    Compiled engines keep their own cache (core.engine.get_engine); only the
+    accelerator artifacts and counters are cleared here.
+    """
+    global _hits, _misses
+    with _lock:
+        _artifacts.clear()
+        _hits = 0
+        _misses = 0

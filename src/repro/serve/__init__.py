@@ -1,5 +1,31 @@
+from repro.serve.dispatch import NoReplicaAvailable, Replica, ReplicaPool  # noqa: F401
+from repro.serve.metrics import BatchRecord, MetricsSnapshot, ServeMetrics  # noqa: F401
 from repro.serve.pointcloud import (  # noqa: F401
     PointCloudServeConfig,
+    inverse_subsample_indices,
     make_pointcloud_serve_fns,
+    pad_cloud,
+    subsample_indices,
+)
+from repro.serve.queue import (  # noqa: F401
+    AdmissionError,
+    AdmissionQueue,
+    DeadlineExceeded,
+    QueueClosed,
+    QueueFull,
+    Request,
+)
+from repro.serve.runtime import (  # noqa: F401
+    RuntimeConfig,
+    ServingRuntime,
+    make_serving_runtime,
+)
+from repro.serve.scheduler import (  # noqa: F401
+    BatchScheduler,
+    MicroBatch,
+    SchedulerConfig,
+    assemble_batch,
+    bucket_for,
+    scatter_results,
 )
 from repro.serve.step import make_serve_fns  # noqa: F401

@@ -1,0 +1,266 @@
+"""Replica pool — one accelerator replica per device, least-loaded dispatch.
+
+Each `Replica` pins a copy of the model parameters to one `jax.devices()`
+entry and executes micro-batches on its own single worker thread, so B
+replicas give B-way compute overlap while every batch still runs on exactly
+one device.  Health is delegated to `runtime/fault_tolerance.py`:
+
+  * HeartbeatMonitor — a pump thread feeds a no-op beat through the
+    replica's worker queue every timeout/4; a wedged worker (hung kernel,
+    dead device) stops beating and the monitor evicts the replica.  The
+    timeout must therefore exceed the worst-case batch latency.
+  * StragglerMonitor — per-batch wall time; slow-but-alive replicas are
+    recorded (metrics.straggler_events) for the operator, not evicted.
+
+Eviction re-dispatches the replica's outstanding batches to the surviving
+replicas, bounded by `max_retries` per batch; a batch that fails everywhere
+fails its future with the last error.  Dispatch is least-loaded (smallest
+in-flight count among alive replicas) — with shape buckets in play, queue
+depth is a better load proxy than round-robin.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from concurrent.futures import Future, ThreadPoolExecutor
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.accelerator import get_accelerator
+from repro.runtime.fault_tolerance import HeartbeatMonitor, StragglerMonitor
+from repro.serve.metrics import BatchRecord, ServeMetrics
+from repro.serve.queue import try_set_exception, try_set_result
+
+
+class NoReplicaAvailable(RuntimeError):
+    """Every replica is dead (or was already tried for this batch)."""
+
+
+class _Entry:
+    """One in-flight batch on one replica (retry bookkeeping)."""
+
+    def __init__(self, mb, future: Future, attempts: int, tried: frozenset):
+        self.mb = mb
+        self.future = future
+        self.attempts = attempts
+        self.tried = tried
+        self.seq = -1  # assigned under the pool lock at registration
+
+
+class Replica:
+    """One device-pinned executor: params copy + single worker thread."""
+
+    def __init__(self, rid: int, device, params, *, on_straggler=None):
+        self.id = rid
+        self.device = device
+        self.params = jax.device_put(params, device)
+        self.alive = True
+        self.n_batches = 0
+        self.inflight: dict[int, _Entry] = {}
+        self.straggler = StragglerMonitor(on_straggler=on_straggler)
+        self.heartbeat: HeartbeatMonitor | None = None
+        self._executor = ThreadPoolExecutor(
+            max_workers=1, thread_name_prefix=f"pc2im-replica-{rid}"
+        )
+
+    def submit(self, fn, *args) -> Future:
+        return self._executor.submit(fn, *args)
+
+    def shutdown(self):
+        self.alive = False
+        if self.heartbeat is not None:
+            self.heartbeat.stop()
+        self._executor.shutdown(wait=False)
+
+
+class ReplicaPool:
+    """Least-loaded dispatch over per-device replicas with health tracking."""
+
+    def __init__(
+        self,
+        model_cfg,
+        params,
+        *,
+        n_replicas: int | None = None,
+        devices=None,
+        heartbeat_timeout_s: float | None = None,
+        max_retries: int = 2,
+        metrics: ServeMetrics | None = None,
+    ):
+        devices = list(devices) if devices is not None else jax.devices()
+        n = n_replicas if n_replicas is not None else len(devices)
+        if n < 1:
+            raise ValueError("need at least one replica")
+        self.model_cfg = model_cfg
+        self.max_retries = max_retries
+        self.metrics = metrics or ServeMetrics()
+        self._lock = threading.Lock()
+        self._seq = 0
+        # round-robin devices when asked for more replicas than devices
+        # (useful on CPU: several logical replicas exercise the dispatch path)
+        self.replicas = [
+            Replica(i, devices[i % len(devices)], params,
+                    on_straggler=self.metrics.record_straggler)
+            for i in range(n)
+        ]
+        self._pumps: list[threading.Thread] = []
+        if heartbeat_timeout_s is not None:
+            for rep in self.replicas:
+                rep.heartbeat = HeartbeatMonitor(
+                    heartbeat_timeout_s,
+                    on_dead=lambda rid=rep.id: self.evict(rid, reason="heartbeat"),
+                ).start()
+                pump = threading.Thread(
+                    target=self._pump, args=(rep,), daemon=True,
+                    name=f"pc2im-hb-pump-{rep.id}",
+                )
+                pump.start()
+                self._pumps.append(pump)
+
+    # -- health ---------------------------------------------------------------
+
+    def _pump(self, rep: Replica):
+        """Route beats THROUGH the worker queue: a wedged worker stops
+        beating, which is exactly the liveness signal we want."""
+        period = rep.heartbeat.timeout_s / 4
+        while rep.alive:
+            try:
+                rep.submit(rep.heartbeat.beat)
+            except RuntimeError:  # executor shut down under us
+                return
+            time.sleep(period)
+
+    def alive_replicas(self) -> list[Replica]:
+        with self._lock:
+            return [r for r in self.replicas if r.alive]
+
+    def evict(self, rid: int, *, reason: str):
+        """Mark a replica dead and re-dispatch its outstanding batches."""
+        with self._lock:
+            rep = self.replicas[rid]
+            if not rep.alive:
+                return
+            rep.alive = False
+            orphans = list(rep.inflight.values())
+            rep.inflight.clear()
+        self.metrics.record_eviction()
+        rep.shutdown()
+        for entry in orphans:
+            if entry.future.done():
+                continue
+            self.metrics.record_retry()
+            self._dispatch(
+                entry.mb, entry.future, entry.attempts + 1,
+                entry.tried | {rid},
+                error=NoReplicaAvailable(f"replica {rid} evicted ({reason})"),
+            )
+
+    # -- dispatch -------------------------------------------------------------
+
+    def submit(self, mb) -> Future:
+        """Run one MicroBatch somewhere healthy; future yields np logits."""
+        future: Future = Future()
+        self._dispatch(mb, future, attempts=0, tried=frozenset())
+        return future
+
+    def _pick(self, tried: frozenset) -> Replica | None:
+        with self._lock:
+            candidates = [
+                r for r in self.replicas if r.alive and r.id not in tried
+            ]
+            if not candidates:
+                return None
+            return min(candidates, key=lambda r: (len(r.inflight), r.id))
+
+    def _dispatch(self, mb, future: Future, attempts: int, tried: frozenset, error=None):
+        if attempts > self.max_retries:
+            try_set_exception(future, error or NoReplicaAvailable("retry budget exhausted"))
+            return
+        rep = self._pick(tried)
+        if rep is None:
+            try_set_exception(
+                future, error or NoReplicaAvailable(f"no replica left (tried {sorted(tried)})")
+            )
+            return
+        entry = _Entry(mb, future, attempts, tried)
+        with self._lock:
+            lost_race = not rep.alive  # evict() won between _pick and here
+            if not lost_race:
+                self._seq += 1
+                entry.seq = self._seq
+                rep.inflight[entry.seq] = entry
+        if lost_race:
+            self._retry(entry, rep.id, NoReplicaAvailable("replica died"))
+            return
+        try:
+            rep.submit(self._execute, rep, entry)
+        except RuntimeError as e:  # executor shut down between pick and submit
+            with self._lock:
+                rep.inflight.pop(entry.seq, None)
+            self._retry(entry, rep.id, e)
+
+    def _retry(self, entry: _Entry, rid: int, err: Exception):
+        if entry.future.done():
+            return
+        self.metrics.record_retry()
+        self._dispatch(entry.mb, entry.future, entry.attempts + 1,
+                       entry.tried | {rid}, error=err)
+
+    def _execute(self, rep: Replica, entry: _Entry):
+        if entry.future.done():  # e.g. already re-dispatched after eviction
+            with self._lock:
+                rep.inflight.pop(entry.seq, None)
+            return
+        mb = entry.mb
+        try:
+            accel = get_accelerator(self.model_cfg, mb.policy)
+            rep.straggler.step_start()
+            batch = jax.device_put(jnp.asarray(mb.batch), rep.device)
+            logits = np.asarray(jax.block_until_ready(accel.infer(rep.params, batch)))
+            dt = rep.straggler.step_end(rep.n_batches)
+            rep.n_batches += 1
+            if rep.heartbeat is not None:
+                rep.heartbeat.beat()
+            with self._lock:
+                rep.inflight.pop(entry.seq, None)
+            # exactly-one-winner: an evicted-but-still-running replica can
+            # race its batch's re-dispatched copy to this future — only the
+            # completion that lands records the batch, so metrics count each
+            # logical micro-batch once
+            if try_set_result(entry.future, logits):
+                self.metrics.record_batch(BatchRecord(
+                    bucket=mb.bucket,
+                    policy_key=(mb.policy.quant, mb.policy.backend),
+                    n_real=mb.n_real,
+                    batch_size=mb.batch.shape[0],
+                    replica_id=rep.id,
+                    duration_s=dt,
+                ))
+        except Exception as e:  # noqa: BLE001 — any device/kernel failure
+            with self._lock:
+                rep.inflight.pop(entry.seq, None)
+            self._retry(entry, rep.id, e)
+
+    # -- lifecycle ------------------------------------------------------------
+
+    def warmup(self, mb):
+        """Compile + run one batch synchronously on EVERY alive replica (the
+        runtime uses this to pre-trace each (bucket, policy) artifact)."""
+        futs = []
+        for rep in self.alive_replicas():
+            entry = _Entry(mb, Future(), attempts=self.max_retries, tried=frozenset())
+            with self._lock:
+                self._seq += 1
+                entry.seq = self._seq
+                rep.inflight[entry.seq] = entry
+            rep.submit(self._execute, rep, entry)
+            futs.append(entry.future)
+        for f in futs:
+            f.result(timeout=300)
+
+    def shutdown(self):
+        for rep in self.replicas:
+            rep.shutdown()

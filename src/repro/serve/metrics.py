@@ -1,0 +1,177 @@
+"""Serving metrics — thread-safe counters + reservoirs, snapshotted on demand.
+
+Every component of the serving runtime reports here: the admission queue
+(rejections), the scheduler (queue depth at drain, batch occupancy, expired
+deadlines), the replica pool (retries, evictions, stragglers) and the
+result scatter (per-request latency).  `snapshot()` reduces the raw samples
+to the numbers tests and benchmarks assert on — p50/p95/p99 latency,
+throughput, mean occupancy — without ever blocking the hot path for more
+than a lock-protected append.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+
+import numpy as np
+
+_RESERVOIR = 65536  # keep the newest N samples per series
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchRecord:
+    """One executed micro-batch (who ran it, how full it was)."""
+
+    bucket: int  # static n_points shape the batch was padded to
+    policy_key: tuple  # (quant, backend) of the batch's ExecutionPolicy
+    n_real: int  # real requests in the batch (rest is filler)
+    batch_size: int  # static batch dim
+    replica_id: int
+    duration_s: float
+
+
+@dataclasses.dataclass(frozen=True)
+class MetricsSnapshot:
+    submitted: int
+    completed: int
+    rejected: int
+    expired: int
+    failed: int
+    retries: int
+    evictions: int
+    batches: int  # executed micro-batches that carried real traffic
+    straggler_events: int
+    latency_p50_s: float
+    latency_p95_s: float
+    latency_p99_s: float
+    throughput_rps: float  # completed requests / observed serving window
+    mean_occupancy: float  # mean(n_real / batch_size) over executed batches
+    queue_depth_mean: float
+    queue_depth_max: int
+
+    def format_row(self) -> str:
+        return (
+            f"completed={self.completed} rejected={self.rejected} "
+            f"expired={self.expired} thr={self.throughput_rps:.1f}/s "
+            f"p50={self.latency_p50_s * 1e3:.1f}ms p95={self.latency_p95_s * 1e3:.1f}ms "
+            f"p99={self.latency_p99_s * 1e3:.1f}ms occ={self.mean_occupancy:.2f}"
+        )
+
+
+class ServeMetrics:
+    """Mutable, thread-safe metrics hub for one runtime instance."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.submitted = 0
+        self.completed = 0
+        self.rejected = 0
+        self.expired = 0
+        self.failed = 0
+        self.retries = 0
+        self.evictions = 0
+        self.straggler_events = 0
+        self._latencies: list[float] = []
+        self._depths: list[int] = []
+        self._batches: list[BatchRecord] = []
+        self._first_t: float | None = None
+        self._last_t: float | None = None
+
+    # -- recording (one lock-protected append each) --------------------------
+
+    def record_submitted(self):
+        with self._lock:
+            self.submitted += 1
+            if self._first_t is None:
+                self._first_t = time.monotonic()
+
+    def record_rejected(self):
+        with self._lock:
+            self.rejected += 1
+
+    def record_expired(self):
+        with self._lock:
+            self.expired += 1
+
+    def record_failed(self, n: int = 1):
+        with self._lock:
+            self.failed += n
+
+    def record_retry(self):
+        with self._lock:
+            self.retries += 1
+
+    def record_eviction(self):
+        with self._lock:
+            self.evictions += 1
+
+    def record_straggler(self, _event=None):
+        with self._lock:
+            self.straggler_events += 1
+
+    def record_completed(self, latency_s: float):
+        with self._lock:
+            self.completed += 1
+            self._last_t = time.monotonic()
+            self._latencies.append(latency_s)
+            del self._latencies[:-_RESERVOIR]
+
+    def record_queue_depth(self, depth: int):
+        with self._lock:
+            self._depths.append(depth)
+            del self._depths[:-_RESERVOIR]
+
+    def record_batch(self, record: BatchRecord):
+        with self._lock:
+            self._batches.append(record)
+            del self._batches[:-_RESERVOIR]
+
+    # -- reading --------------------------------------------------------------
+
+    @property
+    def batch_records(self) -> tuple[BatchRecord, ...]:
+        with self._lock:
+            return tuple(self._batches)
+
+    def snapshot(self) -> MetricsSnapshot:
+        with self._lock:
+            lat = np.asarray(self._latencies, np.float64)
+            p50, p95, p99 = (
+                (float(np.percentile(lat, q)) for q in (50, 95, 99))
+                if lat.size
+                else (0.0, 0.0, 0.0)
+            )
+            window = (
+                (self._last_t - self._first_t)
+                if self._first_t is not None and self._last_t is not None
+                else 0.0
+            )
+            # warmup batches carry no requests (n_real=0); averaging them in
+            # would understate the occupancy real traffic actually saw
+            real = [b for b in self._batches if b.n_real]
+            occ = (
+                float(np.mean([b.n_real / b.batch_size for b in real]))
+                if real
+                else 0.0
+            )
+            depths = np.asarray(self._depths, np.int64)
+            return MetricsSnapshot(
+                submitted=self.submitted,
+                completed=self.completed,
+                rejected=self.rejected,
+                expired=self.expired,
+                failed=self.failed,
+                retries=self.retries,
+                evictions=self.evictions,
+                batches=len(real),
+                straggler_events=self.straggler_events,
+                latency_p50_s=p50,
+                latency_p95_s=p95,
+                latency_p99_s=p99,
+                throughput_rps=(self.completed / window) if window > 0 else 0.0,
+                mean_occupancy=occ,
+                queue_depth_mean=float(depths.mean()) if depths.size else 0.0,
+                queue_depth_max=int(depths.max()) if depths.size else 0,
+            )

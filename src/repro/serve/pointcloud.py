@@ -55,6 +55,29 @@ def subsample_indices(n: int, n_points: int) -> np.ndarray:
     return np.linspace(0, n - 1, n_points).round().astype(np.int64)
 
 
+def inverse_subsample_indices(n: int, n_points: int) -> np.ndarray:
+    """Exact inverse of subsample_indices: for each of the n ORIGINAL rows,
+    the position (in the n_points surviving rows) of its nearest survivor.
+
+    Guarantees, for any n > n_points >= 1 (property-tested):
+      * identity  — a row that survived maps to its own slot, so per-point
+        logits round-trip bitwise for surviving rows;
+      * nearest   — every dropped row maps to the survivor with the smallest
+        row-distance (ties -> the earlier survivor);
+      * monotone  — the mapping is non-decreasing in the original row index.
+
+    Built by searching the actual survivor set rather than re-deriving it
+    from a second rounded linspace (the old inline approximation), so it can
+    never drift off-by-one from whatever subsample_indices produces.
+    """
+    idx = subsample_indices(n, n_points)
+    rows = np.arange(n)
+    right = np.clip(np.searchsorted(idx, rows, side="left"), 0, n_points - 1)
+    left = np.clip(right - 1, 0, n_points - 1)
+    take_left = (rows - idx[left]) <= (idx[right] - rows)
+    return np.where(take_left, left, right).astype(np.int64)
+
+
 def make_pointcloud_serve_fns(
     cfg: PN.PointNet2Config,
     serve_cfg: PointCloudServeConfig | None = None,
@@ -95,9 +118,8 @@ def make_pointcloud_serve_fns(
                     out.append(logits[i])
                 elif n_orig <= n:  # drop padding rows
                     out.append(logits[i, :n_orig])
-                else:  # subsampled: nearest sampled point scores each input row
-                    inv = np.round(np.linspace(0, n - 1, n_orig)).astype(np.int64)
-                    out.append(logits[i, inv])
+                else:  # subsampled: nearest surviving point scores each input row
+                    out.append(logits[i, inverse_subsample_indices(n_orig, n)])
         return out
 
     return {"infer": infer, "serve_batch": serve_batch, "accelerator": accel}

@@ -1,0 +1,180 @@
+"""Bounded admission queue — per-request futures, deadlines, backpressure.
+
+The front door of the serving runtime.  Every client request becomes a
+`Request` with its own `concurrent.futures.Future`; admission is bounded so
+a traffic spike turns into an explicit, reasoned rejection
+(`AdmissionError.reason`) instead of unbounded memory growth and collapsing
+tail latency.  Deadlines are absolute `time.monotonic()` instants carried on
+the request; the scheduler fails expired requests with `DeadlineExceeded`
+the moment it sees them, so a queue that fell behind sheds exactly the work
+whose answer nobody is still waiting for.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import itertools
+import threading
+import time
+from concurrent.futures import Future, InvalidStateError
+
+import numpy as np
+
+from repro.core.policy import ExecutionPolicy
+
+
+def try_set_result(future: Future, result) -> bool:
+    """Cancel-safe, exactly-one-winner future completion.
+
+    A client may cancel() a queued future at any moment, and eviction
+    re-dispatch can race a slow-but-alive replica to the same future —
+    set_result must never raise into (and kill) a scheduler or replica
+    thread, and the returned bool arbitrates which completion 'won' (only
+    the winner records metrics)."""
+    try:
+        future.set_result(result)
+        return True
+    except InvalidStateError:  # cancelled, or the other completion won
+        return False
+
+
+def try_set_exception(future: Future, err: Exception) -> bool:
+    try:
+        future.set_exception(err)
+        return True
+    except InvalidStateError:
+        return False
+
+
+class AdmissionError(RuntimeError):
+    """Request rejected at the front door; `.reason` says why."""
+
+    def __init__(self, reason: str, detail: str = ""):
+        self.reason = reason
+        super().__init__(f"request rejected ({reason})" + (f": {detail}" if detail else ""))
+
+
+class QueueFull(AdmissionError):
+    def __init__(self, depth: int, max_depth: int):
+        super().__init__("queue_full", f"depth {depth} >= max_depth {max_depth}")
+        self.depth = depth
+        self.max_depth = max_depth
+
+
+class QueueClosed(AdmissionError):
+    def __init__(self):
+        super().__init__("closed", "runtime is stopped")
+
+
+class DeadlineExceeded(TimeoutError):
+    """Set on a request's future when its deadline passed before execution."""
+
+
+@dataclasses.dataclass
+class Request:
+    """One admitted inference request.
+
+    bucket is the static n_points shape the scheduler chose for this cloud;
+    together with the resolved policy it forms the micro-batching key, so a
+    batch never mixes shapes or execution policies (each key maps to exactly
+    one jitted artifact).
+    """
+
+    id: int
+    cloud: np.ndarray  # (n, 3 + F) float32
+    n_orig: int  # original row count (pre pad/subsample)
+    bucket: int  # static n_points shape this request is padded to
+    policy: ExecutionPolicy  # RESOLVED policy (hashable batch key)
+    deadline_t: float | None  # absolute time.monotonic() instant, None = no deadline
+    submit_t: float
+    future: Future
+
+    @property
+    def key(self) -> tuple:
+        return (self.bucket, self.policy)
+
+    def expired(self, now: float | None = None) -> bool:
+        if self.deadline_t is None:
+            return False
+        return (time.monotonic() if now is None else now) > self.deadline_t
+
+
+class AdmissionQueue:
+    """Bounded FIFO of Requests with blocking drain for the scheduler."""
+
+    def __init__(self, max_depth: int):
+        if max_depth < 1:
+            raise ValueError(f"max_depth must be >= 1, got {max_depth}")
+        self.max_depth = max_depth
+        self._items: collections.deque[Request] = collections.deque()
+        self._cond = threading.Condition()
+        self._closed = False
+        self._ids = itertools.count()
+
+    def submit(
+        self,
+        cloud: np.ndarray,
+        *,
+        bucket: int,
+        policy: ExecutionPolicy,
+        timeout_s: float | None = None,
+    ) -> Future:
+        """Admit one cloud; returns its future or raises AdmissionError.
+
+        Backpressure is synchronous: a full queue rejects HERE (QueueFull),
+        never silently drops, so open-loop clients observe the shed load.
+        """
+        now = time.monotonic()
+        req = Request(
+            id=-1,
+            cloud=cloud,
+            n_orig=cloud.shape[0],
+            bucket=bucket,
+            policy=policy,
+            deadline_t=(now + timeout_s) if timeout_s is not None else None,
+            submit_t=now,
+            future=Future(),
+        )
+        with self._cond:
+            if self._closed:
+                raise QueueClosed()
+            if len(self._items) >= self.max_depth:
+                raise QueueFull(len(self._items), self.max_depth)
+            req.id = next(self._ids)
+            self._items.append(req)
+            self._cond.notify()
+        return req.future
+
+    def drain(self, max_items: int, timeout_s: float) -> list[Request]:
+        """Pop up to max_items requests, blocking up to timeout_s for the
+        first one.  Returns [] on timeout or when closed-and-empty."""
+        deadline = time.monotonic() + timeout_s
+        with self._cond:
+            while not self._items and not self._closed:
+                remaining = deadline - time.monotonic()
+                if remaining <= 0 or not self._cond.wait(remaining):
+                    break
+            out = []
+            while self._items and len(out) < max_items:
+                out.append(self._items.popleft())
+            return out
+
+    def depth(self) -> int:
+        with self._cond:
+            return len(self._items)
+
+    @property
+    def closed(self) -> bool:
+        with self._cond:
+            return self._closed
+
+    def close(self) -> list[Request]:
+        """Refuse new admissions and return whatever was still queued (the
+        runtime flushes these through one final scheduling pass)."""
+        with self._cond:
+            self._closed = True
+            left = list(self._items)
+            self._items.clear()
+            self._cond.notify_all()
+            return left

@@ -1,0 +1,216 @@
+"""ServingRuntime — the user-facing facade over queue -> scheduler -> pool.
+
+    cfg = get_config("pointnet2-cls", smoke=True)
+    accel = get_accelerator(cfg)
+    params = accel.init(jax.random.PRNGKey(0))
+    with ServingRuntime(cfg, params, RuntimeConfig(max_batch=8)) as rt:
+        fut = rt.submit(cloud)                      # (n, 3+F) numpy, any n
+        logits = fut.result()                       # cls: (C,);  seg: (n, C)
+        print(rt.metrics.snapshot().format_row())
+
+One runtime owns one model config; per-request `ExecutionPolicy` selects the
+numeric path (fp32 vs SC W16A16) and the scheduler guarantees a micro-batch
+never mixes policies or shape buckets, so every batch resolves to exactly
+one cached `PC2IMAccelerator` artifact and one jit trace.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.core.accelerator import get_accelerator
+from repro.core.policy import ExecutionPolicy, resolve_policy
+from repro.serve.dispatch import ReplicaPool
+from repro.serve.metrics import ServeMetrics
+from repro.serve.queue import AdmissionError, AdmissionQueue
+from repro.serve.scheduler import BatchScheduler, MicroBatch, SchedulerConfig, bucket_for
+
+
+@dataclasses.dataclass(frozen=True)
+class RuntimeConfig:
+    """All serving knobs in one hashable bundle.
+
+    buckets=None serves every request at the model config's n_points (one
+    static shape); pass e.g. (192, 256) to trade padding waste for a couple
+    of extra jit traces.  heartbeat_timeout_s=None disables liveness
+    eviction (single-process default); when set it must exceed the
+    worst-case batch latency or healthy-but-slow replicas get evicted.
+    """
+
+    max_batch: int = 8
+    max_wait_s: float = 0.005
+    max_queue: int = 256
+    buckets: tuple[int, ...] | None = None
+    n_replicas: int | None = None  # None -> one per jax.devices() entry
+    heartbeat_timeout_s: float | None = None
+    max_retries: int = 2
+    default_timeout_s: float | None = None  # per-request deadline default
+
+
+class ServingRuntime:
+    def __init__(
+        self,
+        model_cfg,
+        params,
+        config: RuntimeConfig | None = None,
+        *,
+        policy: ExecutionPolicy | None = None,
+        devices=None,
+    ):
+        self.model_cfg = model_cfg
+        self.config = config or RuntimeConfig()
+        self.default_policy = resolve_policy(model_cfg, policy)
+        self.buckets = tuple(sorted(self.config.buckets or (model_cfg.n_points,)))
+        self.metrics = ServeMetrics()
+        self.queue = AdmissionQueue(self.config.max_queue)
+        self.pool = ReplicaPool(
+            model_cfg,
+            params,
+            n_replicas=self.config.n_replicas,
+            devices=devices,
+            heartbeat_timeout_s=self.config.heartbeat_timeout_s,
+            max_retries=self.config.max_retries,
+            metrics=self.metrics,
+        )
+        self.scheduler = BatchScheduler(
+            self.queue,
+            self.pool.submit,
+            task=model_cfg.task,
+            width=3 + model_cfg.in_features,
+            buckets=self.buckets,
+            config=SchedulerConfig(
+                max_batch=self.config.max_batch, max_wait_s=self.config.max_wait_s
+            ),
+            metrics=self.metrics,
+        )
+        self._started = False
+        self._stopped = False
+
+    # -- lifecycle ------------------------------------------------------------
+
+    def start(self):
+        if self._stopped:
+            # the drain thread is joined and the queue closed; a half-revived
+            # runtime would accept submits it can never serve
+            raise RuntimeError(
+                "ServingRuntime cannot be restarted after stop(); "
+                "construct a new instance"
+            )
+        if not self._started:
+            self._started = True
+            self.scheduler.start()
+        return self
+
+    def stop(self, drain: bool = True):
+        """Stop accepting traffic; drain=True completes everything admitted.
+
+        Safe on a never-started runtime too: the queue still closes (further
+        submits raise QueueClosed) and anything admitted is cancelled rather
+        than left hanging — without a scheduler nothing could complete it.
+        """
+        self._stopped = True
+        if self._started:
+            self.scheduler.stop(drain=drain)
+            self._started = False
+        else:
+            for req in self.queue.close():
+                req.future.cancel()
+        self.pool.shutdown()
+
+    def __enter__(self):
+        return self.start()
+
+    def __exit__(self, *exc):
+        self.stop()
+
+    def warmup(self, policies: tuple[ExecutionPolicy | None, ...] = (None,)):
+        """Pre-trace every (bucket, policy) artifact on every replica so the
+        first real request never pays compile latency (and load benchmarks
+        measure serving, not tracing)."""
+        width = 3 + self.model_cfg.in_features
+        for pol in policies:
+            resolved = resolve_policy(self.model_cfg, pol)
+            get_accelerator(self.model_cfg, resolved)  # build artifact once
+            for bucket in self.buckets:
+                mb = MicroBatch(
+                    requests=(),
+                    bucket=bucket,
+                    policy=resolved,
+                    batch=np.zeros((self.config.max_batch, bucket, width), np.float32),
+                )
+                self.pool.warmup(mb)
+        return self
+
+    # -- traffic --------------------------------------------------------------
+
+    def submit(
+        self,
+        cloud: np.ndarray,
+        *,
+        policy: ExecutionPolicy | None = None,
+        timeout_s: float | None = None,
+    ):
+        """Admit one (n, 3+F) cloud; returns a Future.
+
+        Raises AdmissionError (reason "queue_full" / "closed") as synchronous
+        backpressure; the future fails with DeadlineExceeded if the request's
+        deadline passes before it is batched.
+        """
+        cloud = np.asarray(cloud, np.float32)
+        if (
+            cloud.ndim != 2
+            or cloud.shape[0] < 1  # pad_cloud cannot fit an empty cloud
+            or cloud.shape[1] != 3 + self.model_cfg.in_features
+        ):
+            raise ValueError(
+                f"cloud must be (n >= 1, {3 + self.model_cfg.in_features}), "
+                f"got {cloud.shape}"
+            )
+        resolved = (
+            self.default_policy
+            if policy is None
+            else resolve_policy(self.model_cfg, policy)
+        )
+        if timeout_s is None:
+            timeout_s = self.config.default_timeout_s
+        try:
+            fut = self.queue.submit(
+                cloud,
+                bucket=bucket_for(cloud.shape[0], self.buckets),
+                policy=resolved,
+                timeout_s=timeout_s,
+            )
+        except AdmissionError:
+            self.metrics.record_rejected()
+            raise
+        self.metrics.record_submitted()
+        return fut
+
+    def infer(self, cloud: np.ndarray, **kwargs) -> np.ndarray:
+        """Blocking convenience wrapper around submit()."""
+        return self.submit(cloud, **kwargs).result()
+
+    def __repr__(self):
+        return (
+            f"ServingRuntime({self.model_cfg.name}, buckets={self.buckets}, "
+            f"replicas={len(self.pool.replicas)}, max_batch={self.config.max_batch}, "
+            f"devices={[str(r.device) for r in self.pool.replicas]})"
+        )
+
+
+def make_serving_runtime(
+    model_cfg,
+    params=None,
+    config: RuntimeConfig | None = None,
+    *,
+    policy: ExecutionPolicy | None = None,
+    seed: int = 0,
+    devices=None,
+) -> ServingRuntime:
+    """One-call constructor: params default to a fresh init (demo/bench)."""
+    if params is None:
+        params = get_accelerator(model_cfg, policy).init(jax.random.PRNGKey(seed))
+    return ServingRuntime(model_cfg, params, config, policy=policy, devices=devices)

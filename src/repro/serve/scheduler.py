@@ -1,0 +1,269 @@
+"""Dynamic micro-batcher — drain, bucket, batch, dispatch.
+
+The scheduler is the piece that turns ragged open-loop traffic into the
+static shapes the compiled artifacts want.  One background thread drains the
+admission queue and groups requests by `(bucket, policy)`:
+
+  * bucket — the smallest configured static n_points shape that holds the
+    cloud (larger clouds stride-subsample down to the largest bucket), via
+    the same `pad_cloud` used by the synchronous serve path.  Each bucket is
+    ONE jit trace of the accelerator's forward, so a small bucket set caps
+    compilation while keeping padding waste low (the PointAcc "versatile
+    mapping" idea applied to shapes).
+  * policy — the resolved ExecutionPolicy.  A batch never mixes policies,
+    so fp32 and SC W16A16 traffic can interleave at the request level while
+    each micro-batch still hits exactly one (config, policy) artifact.
+
+A key flushes when it holds `max_batch` requests or its oldest request has
+waited `max_wait_s` — the classic dynamic-batching latency/occupancy knob.
+Batch assembly (`assemble_batch`) and result scatter (`scatter_results`)
+are pure functions shared with the tests, which pin the scheduler's output
+bitwise against a direct `accel.infer` on the same padded batch.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Callable, Sequence
+
+import numpy as np
+
+from repro.serve.metrics import ServeMetrics
+from repro.serve.pointcloud import inverse_subsample_indices, pad_cloud
+from repro.serve.queue import (
+    AdmissionQueue,
+    DeadlineExceeded,
+    Request,
+    try_set_exception,
+    try_set_result,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerConfig:
+    max_batch: int = 8  # static batch dim of every micro-batch
+    max_wait_s: float = 0.005  # flush a partial batch after this long
+    drain_tick_s: float = 0.002  # scheduler wake-up granularity
+
+
+@dataclasses.dataclass(frozen=True, eq=False)  # identity hash: lives in sets
+class MicroBatch:
+    """One schedulable unit: same bucket, same policy, static shape."""
+
+    requests: tuple[Request, ...]
+    bucket: int  # n_points of the batch
+    policy: object  # resolved ExecutionPolicy
+    batch: np.ndarray  # (max_batch, bucket, 3 + F) float32, filler rows zero
+
+    @property
+    def n_real(self) -> int:
+        return len(self.requests)
+
+
+def bucket_for(n: int, buckets: Sequence[int]) -> int:
+    """Smallest bucket that holds an n-row cloud; oversized clouds take the
+    largest bucket (and stride-subsample down to it, like pad_cloud)."""
+    for b in buckets:
+        if n <= b:
+            return b
+    return buckets[-1]
+
+
+def assemble_batch(
+    requests: Sequence[Request], bucket: int, width: int, max_batch: int
+) -> np.ndarray:
+    """Pure batch assembly: fit each request's cloud to `bucket` rows via
+    pad_cloud, zero-pad filler batch rows.  Shared with tests so scheduler
+    batches are bitwise-reproducible outside the runtime."""
+    batch = np.zeros((max_batch, bucket, width), np.float32)
+    for i, req in enumerate(requests):
+        batch[i] = pad_cloud(np.asarray(req.cloud, np.float32), bucket)[0]
+    return batch
+
+
+def scatter_results(task: str, logits: np.ndarray, mb: MicroBatch) -> list[np.ndarray]:
+    """Per-request outputs from batched logits.
+
+    cls: row i of the logits.  seg: padding rows dropped; for subsampled
+    (oversized) clouds every original row gets its nearest surviving row's
+    scores via the exact inverse of subsample_indices.
+    """
+    out = []
+    for i, req in enumerate(mb.requests):
+        if task != "seg":
+            out.append(np.asarray(logits[i]))
+        elif req.n_orig <= mb.bucket:
+            out.append(np.asarray(logits[i, : req.n_orig]))
+        else:
+            inv = inverse_subsample_indices(req.n_orig, mb.bucket)
+            out.append(np.asarray(logits[i, inv]))
+    return out
+
+
+class BatchScheduler:
+    """Background drain loop: queue -> MicroBatch -> dispatch_fn.
+
+    dispatch_fn(mb) is the replica pool's submit; it returns a future whose
+    result is the batched logits (np.ndarray).  The scheduler wires the
+    per-request scatter + metrics into the future's done-callback, so result
+    fan-out happens on the replica thread and the drain loop never blocks on
+    execution (Mesorasi-style stage decoupling: admission, batching and
+    compute overlap).
+    """
+
+    def __init__(
+        self,
+        queue: AdmissionQueue,
+        dispatch_fn: Callable,
+        *,
+        task: str,
+        width: int,
+        buckets: Sequence[int],
+        config: SchedulerConfig | None = None,
+        metrics: ServeMetrics | None = None,
+    ):
+        self.queue = queue
+        self.dispatch_fn = dispatch_fn
+        self.task = task
+        self.width = width
+        self.buckets = tuple(sorted(buckets))
+        self.config = config or SchedulerConfig()
+        self.metrics = metrics or ServeMetrics()
+        self._pending: dict[tuple, list[Request]] = {}
+        self._inflight: set = set()
+        self._inflight_cond = threading.Condition()
+        self._stop = threading.Event()
+        self._thread = threading.Thread(
+            target=self._run, name="pc2im-scheduler", daemon=True
+        )
+
+    # -- lifecycle ------------------------------------------------------------
+
+    def start(self):
+        self._thread.start()
+        return self
+
+    def stop(self, drain: bool = True):
+        """Stop the loop; drain=True flushes queued + pending requests and
+        waits for their batches to complete first."""
+        self._stop.set()
+        self._thread.join()
+        leftovers = self.queue.close()
+        if drain:
+            self._admit(leftovers)
+            self._flush_all()
+            self._wait_inflight()
+        else:
+            for req in leftovers + [r for lst in self._pending.values() for r in lst]:
+                req.future.cancel()
+            self._pending.clear()
+
+    def _wait_inflight(self, timeout_s: float = 60.0):
+        deadline = time.monotonic() + timeout_s
+        with self._inflight_cond:
+            while self._inflight:
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    break
+                self._inflight_cond.wait(remaining)
+
+    # -- drain loop -----------------------------------------------------------
+
+    def _run(self):
+        cfg = self.config
+        while not self._stop.is_set():
+            # the drain thread must survive anything a single bad request can
+            # throw (it serves every OTHER request too) — _dispatch already
+            # fails the affected batch; this is the last-resort guard
+            try:
+                reqs = self.queue.drain(cfg.max_batch, cfg.drain_tick_s)
+                if reqs:
+                    self.metrics.record_queue_depth(self.queue.depth() + len(reqs))
+                self._admit(reqs)
+                self._flush_ready()
+            except Exception:  # noqa: BLE001
+                self.metrics.record_failed()
+
+    def _admit(self, reqs: Sequence[Request]):
+        now = time.monotonic()
+        for req in reqs:
+            if req.future.done():  # client cancelled while queued
+                continue
+            if req.expired(now):
+                self._expire(req)
+                continue
+            self._pending.setdefault(req.key, []).append(req)
+
+    def _expire(self, req: Request):
+        if try_set_exception(
+            req.future, DeadlineExceeded(f"request {req.id} deadline passed")
+        ):
+            self.metrics.record_expired()
+
+    def _flush_ready(self):
+        now = time.monotonic()
+        for key in list(self._pending):
+            lst = self._pending[key]
+            while len(lst) >= self.config.max_batch:
+                chunk, self._pending[key] = lst[: self.config.max_batch], lst[self.config.max_batch :]
+                lst = self._pending[key]
+                self._dispatch(key, chunk)
+            if lst and now - lst[0].submit_t >= self.config.max_wait_s:
+                self._pending[key] = []
+                self._dispatch(key, lst)
+
+    def _flush_all(self):
+        for key in list(self._pending):
+            lst, self._pending[key] = self._pending[key], []
+            for lo in range(0, len(lst), self.config.max_batch):
+                self._dispatch(key, lst[lo : lo + self.config.max_batch])
+
+    def _dispatch(self, key: tuple, requests: list[Request]):
+        # shed what expired (or was cancelled) while waiting in _pending —
+        # deadlines are re-checked at every stage, not just admission
+        now = time.monotonic()
+        live = []
+        for req in requests:
+            if req.expired(now):
+                self._expire(req)
+            elif not req.future.done():
+                live.append(req)
+        if not live:
+            return
+        bucket, policy = key
+        try:
+            batch = assemble_batch(live, bucket, self.width, self.config.max_batch)
+        except Exception as e:  # noqa: BLE001 — one bad cloud fails ITS batch only
+            self.metrics.record_failed(len(live))
+            for req in live:
+                try_set_exception(req.future, e)
+            return
+        mb = MicroBatch(requests=tuple(live), bucket=bucket, policy=policy, batch=batch)
+        with self._inflight_cond:
+            self._inflight.add(mb)
+        fut = self.dispatch_fn(mb)
+        fut.add_done_callback(lambda f, mb=mb: self._on_batch_done(mb, f))
+
+    def _on_batch_done(self, mb: MicroBatch, fut):
+        try:
+            err = fut.exception()
+            if err is not None:
+                self.metrics.record_failed(mb.n_real)
+                for req in mb.requests:
+                    try_set_exception(req.future, err)
+                return
+            outs = scatter_results(self.task, fut.result(), mb)
+            now = time.monotonic()
+            for req, out in zip(mb.requests, outs):
+                if req.expired(now):
+                    # executed but too late: an SLO client must NOT count a
+                    # deadline-violating response as success
+                    self._expire(req)
+                elif try_set_result(req.future, out):
+                    self.metrics.record_completed(now - req.submit_t)
+        finally:
+            with self._inflight_cond:
+                self._inflight.discard(mb)
+                self._inflight_cond.notify_all()

@@ -1,0 +1,111 @@
+"""Round-trip property tests for the ragged-cloud fit (satellite of the
+serving-runtime PR): `pad_cloud` + `subsample_indices` must let seg callers
+map per-point logits back to ORIGINAL rows exactly.
+
+The old serve path re-derived the inverse from a second rounded linspace —
+an approximation that happened to agree on small sizes but had no guarantee.
+`inverse_subsample_indices` is built by searching the actual survivor set,
+so these properties hold by construction and are pinned here:
+
+  identity — a surviving row maps back to its own logit row (bitwise);
+  nearest  — a dropped row maps to the survivor at minimal row distance;
+  monotone — the inverse is sorted (spatial order is preserved).
+"""
+
+import numpy as np
+import pytest
+
+from _hypothesis import given, settings, st
+from repro.serve.pointcloud import (
+    inverse_subsample_indices,
+    pad_cloud,
+    subsample_indices,
+)
+
+
+def _check_properties(n: int, n_points: int):
+    idx = subsample_indices(n, n_points)
+    inv = inverse_subsample_indices(n, n_points)
+    assert inv.shape == (n,) and inv.dtype == np.int64
+    # identity: surviving rows map to their own slot
+    np.testing.assert_array_equal(inv[idx], np.arange(n_points))
+    # nearest: every row maps to a minimal-distance survivor
+    dist = np.abs(idx[inv] - np.arange(n))
+    best = np.min(np.abs(idx[None, :] - np.arange(n)[:, None]), axis=1)
+    np.testing.assert_array_equal(dist, best)
+    # monotone: mapping preserves row order
+    assert np.all(np.diff(inv) >= 0)
+    # in range
+    assert inv.min() >= 0 and inv.max() <= n_points - 1
+
+
+class TestInverseSubsampleGrid:
+    """Exhaustive small-size grid + adversarial large sizes (no hypothesis
+    needed — runs on bare environments too)."""
+
+    def test_small_exhaustive(self):
+        for n in range(2, 48):
+            for n_points in range(1, n + 1):
+                _check_properties(n, n_points)
+
+    @pytest.mark.parametrize(
+        "n,n_points",
+        [(97, 13), (1000, 999), (1000, 7), (4097, 64), (50000, 1024), (12345, 677)],
+    )
+    def test_large(self, n, n_points):
+        _check_properties(n, n_points)
+
+
+class TestPadCloudRoundTrip:
+    def test_oversized_uses_subsample_indices(self):
+        """pad_cloud's oversized path IS subsample_indices (no second
+        derivation that could drift)."""
+        rng = np.random.default_rng(0)
+        cloud = rng.standard_normal((300, 3)).astype(np.float32)
+        fitted, n_orig = pad_cloud(cloud, 256)
+        assert n_orig == 300
+        np.testing.assert_array_equal(fitted, cloud[subsample_indices(300, 256)])
+
+    def test_undersized_keeps_original_rows(self):
+        rng = np.random.default_rng(1)
+        cloud = rng.standard_normal((100, 3)).astype(np.float32)
+        fitted, n_orig = pad_cloud(cloud, 256)
+        assert n_orig == 100 and fitted.shape == (256, 3)
+        np.testing.assert_array_equal(fitted[:100], cloud)
+        # filler repeats the last point (collapses to one FPS candidate)
+        np.testing.assert_array_equal(fitted[100:], np.broadcast_to(cloud[-1:], (156, 3)))
+
+    def test_seg_logits_map_back_to_original_rows(self):
+        """The full seg round trip: per-SURVIVOR logits -> per-original-row
+        logits.  Row j gets its own score if it survived, else its nearest
+        survivor's score."""
+        n, n_points = 517, 128
+        idx = subsample_indices(n, n_points)
+        logits = np.arange(n_points, dtype=np.float32)[:, None]  # logit = slot id
+        mapped = logits[inverse_subsample_indices(n, n_points)]
+        # surviving rows: exact own score
+        np.testing.assert_array_equal(mapped[idx, 0], np.arange(n_points))
+        # dropped rows: score of a minimal-distance survivor
+        for j in range(n):
+            src = int(mapped[j, 0])
+            assert abs(idx[src] - j) == np.min(np.abs(idx - j))
+
+
+@settings(max_examples=200, deadline=None)
+@given(n_points=st.integers(1, 512), extra=st.integers(1, 4096))
+def test_inverse_properties_hypothesis(n_points, extra):
+    _check_properties(n_points + extra, n_points)
+
+
+@settings(max_examples=50, deadline=None)
+@given(n_points=st.integers(2, 128), extra=st.integers(1, 512))
+def test_pad_cloud_roundtrip_hypothesis(n_points, extra):
+    """pad_cloud(oversized) then inverse-mapping reproduces each surviving
+    row bitwise at its original position."""
+    n = n_points + extra
+    cloud = np.arange(n * 3, dtype=np.float32).reshape(n, 3)  # row-unique values
+    fitted, n_orig = pad_cloud(cloud, n_points)
+    assert n_orig == n
+    idx = subsample_indices(n, n_points)
+    back = fitted[inverse_subsample_indices(n, n_points)]  # (n, 3)
+    np.testing.assert_array_equal(back[idx], cloud[idx])
