@@ -137,9 +137,25 @@ def serve_bench(smoke: bool = False) -> list[dict]:
     return serve_load.run(smoke=smoke)
 
 
+def pipeline_bench(smoke: bool = False) -> list[dict]:
+    """Preprocess/feature overlap: PipelinedExecutor vs blocking sequential
+    infer over one micro-batch stream (see benchmarks/pipeline_overlap.py)."""
+    from benchmarks import pipeline_overlap
+
+    return pipeline_overlap.run(smoke=smoke)
+
+
+def _print_rows(rows: list) -> None:
+    """Print wall-clock rows as name,us,note CSV (one place for the format)."""
+    import math
+
+    for row in rows:
+        us = "" if math.isnan(row["us"]) else f"{row['us']:.1f}"
+        print(f"{row['name']},{us},{row['note']}")
+
+
 def main() -> None:
     import importlib
-    import math
 
     steps = 0
     smoke = "--smoke" in sys.argv[1:]
@@ -149,12 +165,11 @@ def main() -> None:
 
     print("name,us_per_call,derived")
     if smoke:
-        # CI lane: just the serving-runtime load benchmark, reduced size —
-        # keeps the open-loop path exercised on every push without the full
-        # paper-table sweep.
-        for row in serve_bench(smoke=True):
-            us = "" if math.isnan(row["us"]) else f"{row['us']:.1f}"
-            print(f"{row['name']},{us},{row['note']}")
+        # CI lane: the serving-runtime load benchmark + the pipelined-overlap
+        # lane, reduced size — keeps the open-loop path and the stage-overlap
+        # speedup exercised on every push without the full paper-table sweep.
+        _print_rows(serve_bench(smoke=True))
+        _print_rows(pipeline_bench(smoke=True))
         return
     for mod_name, kwargs in [
         ("benchmarks.fig12b_preproc_energy", {}),
@@ -176,9 +191,8 @@ def main() -> None:
         print(f"{row['name']},{row['us']:.1f},{row['derived']:.1f} clouds/s")
     for row in accelerator_bench():
         print(f"{row['name']},{row['us']:.1f},{row['derived']:.1f} clouds/s")
-    for row in serve_bench():
-        us = "" if math.isnan(row["us"]) else f"{row['us']:.1f}"
-        print(f"{row['name']},{us},{row['note']}")
+    _print_rows(serve_bench())
+    _print_rows(pipeline_bench())
 
 
 if __name__ == "__main__":

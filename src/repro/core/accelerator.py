@@ -34,6 +34,7 @@ import jax
 
 from repro.core.policy import ExecutionPolicy, resolve_policy
 from repro.models import pointnet2 as PN
+from repro.parallel.pipeline import two_stage_schedule
 
 
 class PC2IMAccelerator:
@@ -72,6 +73,21 @@ class PC2IMAccelerator:
                 params, cfg, points, labels, policy=pol
             )
         )
+        # the fused forward IS feature_stage(preprocess_stage(...)) — these
+        # sub-artifacts run the same code behind separate jit boundaries, so
+        # a pipelined schedule can overlap micro-batch k+1's preprocessing
+        # with micro-batch k's feature MLPs without changing one output bit
+        self._preprocess_stage = jax.jit(
+            lambda points: PN.preprocess_stage(cfg, points, policy=pol)
+        )
+        self._feature_stage = jax.jit(
+            lambda params, points, pre: PN.feature_stage(
+                params, cfg, points, pre, policy=pol
+            )
+        )
+        # PipelinedExecutor cache for infer_pipelined (keyed by devices/depth)
+        self._executors: dict = {}
+        self._executors_lock = threading.Lock()
 
     # -- artifacts -----------------------------------------------------------
 
@@ -84,8 +100,10 @@ class PC2IMAccelerator:
         return self._forward(params, points)
 
     def infer(self, params, points: jax.Array) -> jax.Array:
-        """Inference entry point — same compiled artifact as `forward`
-        (serving call-sites read better as `accel.infer`)."""
+        """Inference entry point — same compiled artifact as `forward`.
+
+        Serving call-sites read better as `accel.infer`.
+        """
         return self._forward(params, points)
 
     def loss(self, params, points: jax.Array, labels: jax.Array):
@@ -93,9 +111,51 @@ class PC2IMAccelerator:
         return self._loss(params, points, labels)
 
     def loss_fn(self, params, points: jax.Array, labels: jax.Array):
-        """Un-jitted loss for use under jax.grad / custom training loops
-        (still pinned to this accelerator's policy)."""
+        """Un-jitted loss for jax.grad / custom training loops.
+
+        Still pinned to this accelerator's policy.
+        """
         return PN.loss_fn(params, self.config, points, labels, policy=self.policy)
+
+    # -- staged sub-artifacts (the pipelined execution path) -----------------
+
+    def preprocess_stage(self, points: jax.Array) -> tuple:
+        """Params-free preprocessing sub-artifact, one PreprocessResult per SA stage.
+
+        Chains MSP partition + FPS + neighbour query stage after stage.
+        This is the half of `infer` that never reads the model parameters —
+        only coordinates — which is what makes it safe to run for micro-batch
+        k+1 while micro-batch k is still inside `feature_stage`.
+        """
+        return self._preprocess_stage(points)
+
+    def feature_stage(self, params, points: jax.Array, preproc: tuple) -> jax.Array:
+        """Feature sub-artifact: SC-CIM per-point MLPs + aggregation.
+
+        Consumes the neighborhoods `preprocess_stage` computed.
+        `feature_stage(params, pts, preprocess_stage(pts))` is bitwise-equal
+        to `infer(params, pts)` (pinned by tests/test_pipelined_accelerator.py).
+        """
+        return self._feature_stage(params, points, preproc)
+
+    def infer_pipelined(self, params, batches, *, devices=None, depth: int = 2) -> list:
+        """Run a stream of micro-batches through the two-stage pipeline.
+
+        Convenience wrapper over `PipelinedExecutor`: batch k+1's
+        preprocessing overlaps batch k's feature MLPs.  Returns one logits
+        array per input batch, in order, each bitwise-equal to
+        `infer(params, batch)`.  The executor is cached per (devices,
+        depth), so repeated calls on a multi-device host reuse the placed
+        parameters instead of re-transferring them every call.
+        """
+        key = (tuple(devices) if devices is not None else None, depth)
+        with self._executors_lock:
+            ex = self._executors.get(key)
+            if ex is None:
+                ex = self._executors[key] = PipelinedExecutor(
+                    self, devices=devices, depth=depth
+                )
+        return ex.run(params, batches)
 
     def __repr__(self) -> str:
         return (
@@ -104,20 +164,102 @@ class PC2IMAccelerator:
         )
 
 
+class PipelinedExecutor:
+    """Double-buffered two-stage executor over one accelerator's sub-artifacts.
+
+    Streams micro-batches through `preprocess_stage` -> `feature_stage` so
+    batch k+1's preprocessing (FPS / lattice kernels — the paper's APD-CIM
+    and Ping-Pong-MAX CAM half) overlaps batch k's SC-CIM feature MLPs,
+    mirroring how the hardware's CAM updates temporary distances while
+    search proceeds:
+
+        ex = PipelinedExecutor(get_accelerator(cfg, policy))
+        logits = ex.run(params, batches)     # list, one per batch, in order
+
+    On ONE device the overlap comes from jax's asynchronous dispatch: the
+    producer thread enqueues preprocessing without ever calling
+    `block_until_ready`, so the device schedules it behind/alongside the
+    feature computation already in flight.  With >= 2 devices the stages are
+    pinned to different devices (preprocess on `devices[0]`, features on
+    `devices[1]`, parameters resident there) and the hand-off transfers the
+    intermediate neighborhoods — true two-stage pipeline parallelism via
+    `parallel.pipeline.two_stage_schedule`.
+
+    Results are bitwise-equal to sequential `infer` calls: both paths run
+    the same compiled sub-artifact composition (pinned test).
+    """
+
+    def __init__(self, accel: PC2IMAccelerator, *, devices=None, depth: int = 2):
+        self.accel = accel
+        self.devices = tuple(devices) if devices is not None else tuple(jax.devices())
+        self.depth = depth
+        # last (params, placed-on-feature-device copy) pair, reused across
+        # run() calls so a serving loop doesn't re-transfer the weights every
+        # stream (identity check: params pytrees are treated as immutable).
+        # NOTE the latest generation stays referenced until the next swap or
+        # clear_cache() — the same lifetime replica params already have in
+        # serve/dispatch.py, where each Replica pins a device copy for good
+        self._placed: tuple = (None, None)
+
+    def _params_on(self, params, device):
+        cached_key, cached_placed = self._placed
+        if cached_key is params:
+            return cached_placed
+        # return the LOCAL, never re-read self._placed: a concurrent run()
+        # with different params may overwrite the cache between assignment
+        # and return, and this stream must keep ITS weights either way
+        placed = jax.device_put(params, device)
+        self._placed = (params, placed)
+        return placed
+
+    def run(self, params, batches) -> list:
+        """Execute every (B, N, 3+F) batch; returns per-batch logits in order.
+
+        The returned arrays are still asynchronous jax values — block (or
+        `np.asarray` them) when the wall-clock matters.
+        """
+        accel = self.accel
+        if len(self.devices) >= 2:
+            dev_pre, dev_feat = self.devices[0], self.devices[1]
+            params_feat = self._params_on(params, dev_feat)
+
+            def stage_a(batch):
+                batch = jax.device_put(batch, dev_pre)
+                return batch, accel.preprocess_stage(batch)
+
+            def stage_b(handoff):
+                batch, pre = jax.device_put(handoff, dev_feat)
+                return accel.feature_stage(params_feat, batch, pre)
+
+        else:
+
+            def stage_a(batch):
+                # async dispatch: enqueue and hand off, never block
+                return batch, accel.preprocess_stage(batch)
+
+            def stage_b(handoff):
+                batch, pre = handoff
+                return accel.feature_stage(params, batch, pre)
+
+        return two_stage_schedule(stage_a, stage_b, batches, depth=self.depth)
+
+
 @dataclasses.dataclass(frozen=True)
 class CacheStats:
     """Snapshot of the accelerator cache (see `cache_stats`).
 
     hits/misses count `get_accelerator` calls; size is the number of live
-    artifacts; keys names each artifact as (config.name, quant, backend) so
-    tests and the serving runtime can assert one-artifact-per-(config,
-    policy) and detect compile storms under concurrent traffic.
+    artifacts; keys names each artifact as (config.name, quant, backend,
+    pipeline) so tests and the serving runtime can assert
+    one-artifact-per-(config, policy) — pipelined and sequential traffic
+    resolve to DIFFERENT keys — and detect compile storms under concurrent
+    traffic.
     """
 
     hits: int
     misses: int
     size: int
-    keys: tuple[tuple[str, str, str | None], ...]
+    keys: tuple[tuple[str, str, str | None, str], ...]
 
 
 # Explicit dict cache (not lru_cache): the serving runtime calls
@@ -158,7 +300,7 @@ def cache_stats() -> CacheStats:
     """Introspect the accelerator cache (hit/miss counters + live keys)."""
     with _lock:
         keys = tuple(
-            (cfg.name, pol.quant, pol.backend) for cfg, pol in _artifacts
+            (cfg.name, pol.quant, pol.backend, pol.pipeline) for cfg, pol in _artifacts
         )
         return CacheStats(hits=_hits, misses=_misses, size=len(_artifacts), keys=keys)
 

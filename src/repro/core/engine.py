@@ -69,12 +69,14 @@ class EngineConfig:
 
     @property
     def resolved_metric(self) -> str:
+        """FPS distance metric with the None placeholder resolved."""
         if self.metric is not None:
             return self.metric
         return "l1" if self.pipeline == "pc2im" else "l2"
 
     @property
     def resolved_query(self) -> str:
+        """Neighbour-query kind with the None placeholder resolved."""
         if self.query is not None:
             return self.query
         return "lattice" if self.pipeline == "pc2im" else "ball"
@@ -121,19 +123,36 @@ class PreprocessEngine:
                 f"2^depth={config.n_tiles} tiles"
             )
         self.config = config
-        self._fn = jax.jit(
-            {
-                "baseline1": self._baseline1,
-                "baseline2": self._baseline2,
-                "pc2im": self._pc2im,
-            }[config.pipeline]
-        )
+        self._raw_fn = {
+            "baseline1": self._baseline1,
+            "baseline2": self._baseline2,
+            "pc2im": self._pc2im,
+        }[config.pipeline]
+        self._fn = jax.jit(self._raw_fn)
 
     def __call__(self, points: jax.Array) -> PreprocessResult:
+        """Run the jit-compiled pipeline on (B, N, 3) or single (N, 3) coords.
+
+        See the class docstring for the output layout.
+        """
+        return self._dispatch(points, self._fn)
+
+    def raw(self, points: jax.Array) -> PreprocessResult:
+        """Un-jitted equivalent of calling the engine, for composition.
+
+        Same validation and shape handling as `__call__`.
+        `PC2IMAccelerator` builds its preprocess-stage sub-artifact by
+        chaining the per-SA-stage engines inside ONE enclosing jit; tracing
+        the raw pipeline keeps that artifact a single jaxpr instead of a
+        nest of engine dispatches.  Outside a trace, prefer `__call__`.
+        """
+        return self._dispatch(points, self._raw_fn)
+
+    def _dispatch(self, points: jax.Array, fn) -> PreprocessResult:
         if points.ndim == 2:
             if points.shape[-1] != 3:
                 raise ValueError(f"expected (B, N, 3) or (N, 3), got {points.shape}")
-            res = self._fn(points[None])
+            res = fn(points[None])
             return jax.tree.map(lambda x: x[0], res)
         if points.ndim != 3 or points.shape[-1] != 3:
             raise ValueError(f"expected (B, N, 3) or (N, 3), got {points.shape}")
@@ -143,7 +162,7 @@ class PreprocessEngine:
                 f"N={points.shape[1]} not divisible by 2^depth={cfg.n_tiles}; "
                 f"pad the clouds or lower depth (see clamp_depth)"
             )
-        return self._fn(points)
+        return fn(points)
 
     # -- pipelines -----------------------------------------------------------
 
@@ -164,8 +183,11 @@ class PreprocessEngine:
         )
 
     def _baseline2(self, points: jax.Array) -> PreprocessResult:
-        """TiPU-like ragged grid tiles: masked flow, XLA path (no kernel has
-        valid-mask support — the registry's documented fallback)."""
+        """TiPU-like ragged grid tiles: masked flow, always the XLA path.
+
+        No kernel has valid-mask support — the registry's documented
+        fallback.
+        """
         cfg = self.config
         return jax.vmap(
             lambda p: pp_mod.preprocess_baseline2(
@@ -175,8 +197,10 @@ class PreprocessEngine:
         )(points)
 
     def _pc2im(self, points: jax.Array) -> PreprocessResult:
-        """MSP tiles + local FPS + local query with batch x tiles folded into
-        one (B·T, P) kernel grid axis."""
+        """MSP tiles + local FPS + local query.
+
+        Batch x tiles fold into one (B·T, P) kernel grid axis.
+        """
         cfg = self.config
         b, n, _ = points.shape
         t = cfg.n_tiles
@@ -229,6 +253,8 @@ class PreprocessEngine:
 
 @functools.lru_cache(maxsize=None)
 def get_engine(config: EngineConfig) -> PreprocessEngine:
-    """Engine cache: one jitted engine per distinct config (models/serve
-    build engines per SA stage; the cache makes that free)."""
+    """Engine cache: one jitted engine per distinct config.
+
+    models/ and serve/ build engines per SA stage; the cache makes that free.
+    """
     return PreprocessEngine(config)

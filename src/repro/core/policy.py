@@ -34,6 +34,7 @@ from __future__ import annotations
 import dataclasses
 
 QUANT_MODES = ("none", "sc_w16a16", "sc_w8a8")
+PIPELINE_MODES = ("sequential", "pipelined")
 _QUANT_BITS = {"sc_w16a16": 16, "sc_w8a8": 8}
 
 
@@ -52,6 +53,16 @@ class ExecutionPolicy:
                 instead of silently resetting it to "auto".
     interpret : Pallas interpret-mode flag; None defers to the registry
                 default (interpret off-TPU).
+    pipeline  : execution schedule of the compiled artifact — "sequential"
+                runs preprocessing then the feature MLPs back to back (one
+                fused trace per call); "pipelined" executes the accelerator's
+                split preprocess/feature sub-artifacts so micro-batch k+1's
+                preprocessing (FPS / lattice kernels) overlaps micro-batch
+                k's SC-CIM feature MLPs (the paper's Ping-Pong-MAX /
+                Mesorasi-style stage decoupling).  Participates in the
+                policy's hash, so pipelined and sequential traffic resolve
+                to DIFFERENT cached artifacts and a serving micro-batch
+                never mixes schedules (see serve/scheduler.py).
     precision / sharding : reserved knobs for later scaling PRs (matmul
                 precision, named sharding policies); carried now so the
                 policy's hash identity is stable when they land.
@@ -62,6 +73,7 @@ class ExecutionPolicy:
     interpret: bool | None = None
     precision: str = "default"
     sharding: str | None = None
+    pipeline: str = "sequential"
 
     def __post_init__(self):
         if self.quant not in QUANT_MODES:
@@ -69,6 +81,10 @@ class ExecutionPolicy:
         if self.backend not in (None, "auto", "pallas", "xla"):
             raise ValueError(
                 f"backend must be None, 'auto', 'pallas' or 'xla', got {self.backend!r}"
+            )
+        if self.pipeline not in PIPELINE_MODES:
+            raise ValueError(
+                f"pipeline must be one of {PIPELINE_MODES}, got {self.pipeline!r}"
             )
 
     @property
@@ -99,8 +115,7 @@ def policy_for(cfg) -> ExecutionPolicy:
 
 
 def resolve_policy(cfg, policy: ExecutionPolicy | None) -> ExecutionPolicy:
-    """Resolve a caller-supplied policy against a config, ONCE, before it is
-    threaded anywhere.
+    """Resolve a caller-supplied policy against a config, once, at the entry point.
 
     None -> the config's default policy.  backend=None -> the config's
     pinned backend (preproc_backend, else "auto"), so BOTH halves —

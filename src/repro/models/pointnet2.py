@@ -127,14 +127,96 @@ def stage_engine(
     return get_engine(ec)
 
 
-def _sa_stage(cfg, sa_cfg, mlp_params, xyz, feats, policy):
+def preprocess_stage(
+    cfg: PointNet2Config, points: jax.Array,
+    policy: ExecutionPolicy | None = None,
+) -> tuple:
+    """Params-free preprocessing half: points (B, N, 3+F) -> per-SA results.
+
+    The whole preprocessing chain — MSP partition, FPS, lattice/ball query,
+    stage after stage — consumes only coordinates: stage i samples from
+    stage i-1's *centroid_xyz*, never from learned features.  That is the
+    paper's decoupling (and Mesorasi's delayed-aggregation observation)
+    made explicit: this function is the "preprocess sub-artifact" the
+    pipelined accelerator runs for micro-batch k+1 while micro-batch k is
+    still inside the feature MLPs.  Returns one PreprocessResult per SA
+    stage; feed them to `feature_stage` to finish the forward pass.
+    """
+    policy = resolve_policy(cfg, policy)
+    xyz = points[..., :3]
+    # under an enclosing jit (the accelerator's sub-artifact), the raw engine
+    # pipelines trace into ONE jaxpr; eager callers (e.g. un-jitted loss_fn
+    # under jax.grad-less loops) keep each stage's own compiled engine
+    traced = isinstance(xyz, jax.core.Tracer)
+    results = []
+    for sa_cfg in cfg.sa:
+        engine = stage_engine(cfg, sa_cfg, xyz.shape[-2], policy)
+        res = engine.raw(xyz) if traced else engine(xyz)
+        results.append(res)
+        xyz = res.centroid_xyz
+    return tuple(results)
+
+
+def feature_stage(
+    params, cfg: PointNet2Config, points: jax.Array, preproc: tuple,
+    policy: ExecutionPolicy | None = None,
+) -> jax.Array:
+    """Feature half: per-point MLPs + aggregation over precomputed neighborhoods.
+
+    `preproc` is `preprocess_stage`'s output (one PreprocessResult per SA
+    stage).  Composing the two stages is bitwise-identical to the fused
+    forward — `forward` IS this composition — which is what lets the
+    pipelined executor overlap the halves of consecutive micro-batches
+    without changing a single output bit (pinned by
+    tests/test_pipelined_accelerator.py).
+    """
+    policy = resolve_policy(cfg, policy)
+    xyz = points[..., :3]
+    feats = points[..., 3:] if cfg.in_features else None
+
+    levels = [(xyz, feats)]
+    for sa_cfg, mlp_p, res in zip(cfg.sa, params["sa"], preproc):
+        xyz_i, feats_i = levels[-1]
+        levels.append(_sa_stage(cfg, sa_cfg, mlp_p, xyz_i, feats_i, policy, res=res))
+
+    if cfg.task == "cls":
+        xyz_l, feats_l = levels[-1]
+        x = jnp.concatenate([xyz_l, feats_l], axis=-1)  # (B, M, C)
+        x = nn.mlp_apply(params["global"], x, policy=policy)
+        x = jnp.max(x, axis=1)  # global max pool per cloud
+        return nn.mlp_apply(params["head"], x, final_act=False, policy=policy)
+
+    # segmentation: FP stages walk the pyramid back from coarse to fine.
+    # Skip channels (mirrors init_params): intermediate levels contribute
+    # their SA features; the finest level contributes raw xyz(+input feats).
+    coarse_xyz, coarse_f = levels[-1]
+    n_fp = len(params["fp"])
+    for i, fp_p in enumerate(params["fp"]):
+        fine_xyz, fine_f = levels[n_fp - 1 - i]
+        idx, dist = jax.vmap(lambda q, r: Q.knn(q, r, 3))(fine_xyz, coarse_xyz)
+        w = Q.three_nn_interpolate_weights(dist)
+        interp = jax.vmap(G.interpolate_features)(coarse_f, idx, w)  # (B, Nf, Cc)
+        if i == n_fp - 1:  # finest level: raw inputs as skip
+            skip = fine_xyz if fine_f is None else jnp.concatenate([fine_xyz, fine_f], -1)
+        else:
+            skip = fine_f
+        x = jnp.concatenate([interp, skip], axis=-1)
+        coarse_f = nn.mlp_apply(fp_p, x, policy=policy)
+        coarse_xyz = fine_xyz
+    return nn.mlp_apply(params["head"], coarse_f, final_act=False, policy=policy)
+
+
+def _sa_stage(cfg, sa_cfg, mlp_params, xyz, feats, policy, res=None):
     """One BATCHED set-abstraction stage.  xyz (B, N, 3), feats (B, N, C)|None.
 
     Preprocessing runs through the PreprocessEngine (batch and MSP tiles fold
     into one kernel grid); the per-point MLP applies batch-wide (it is
-    leading-dim agnostic); only the index gathers vmap over clouds.
+    leading-dim agnostic); only the index gathers vmap over clouds.  Passing
+    a precomputed `res` (from `preprocess_stage`) skips the engine call —
+    the feature-stage sub-artifact consumes neighborhoods computed earlier.
     """
-    res = stage_engine(cfg, sa_cfg, xyz.shape[1], policy)(xyz)
+    if res is None:
+        res = stage_engine(cfg, sa_cfg, xyz.shape[-2], policy)(xyz)
     nbrs = res.neighbors
     if cfg.aggregation == "delayed":
         # C5: per-POINT mlp on [abs-xyz, feats], then gather + masked maxpool
@@ -171,40 +253,15 @@ def forward(
 
 
 def _forward_batched(params, cfg: PointNet2Config, points: jax.Array, policy):
-    """points: (B, N, 3 + in_features) -> logits (cls: (B,C), seg: (B,N,C))."""
-    xyz = points[..., :3]
-    feats = points[..., 3:] if cfg.in_features else None
+    """points: (B, N, 3 + in_features) -> logits (cls: (B,C), seg: (B,N,C)).
 
-    levels = [(xyz, feats)]
-    for sa_cfg, mlp_p in zip(cfg.sa, params["sa"]):
-        xyz_i, feats_i = levels[-1]
-        levels.append(_sa_stage(cfg, sa_cfg, mlp_p, xyz_i, feats_i, policy))
-
-    if cfg.task == "cls":
-        xyz_l, feats_l = levels[-1]
-        x = jnp.concatenate([xyz_l, feats_l], axis=-1)  # (B, M, C)
-        x = nn.mlp_apply(params["global"], x, policy=policy)
-        x = jnp.max(x, axis=1)  # global max pool per cloud
-        return nn.mlp_apply(params["head"], x, final_act=False, policy=policy)
-
-    # segmentation: FP stages walk the pyramid back from coarse to fine.
-    # Skip channels (mirrors init_params): intermediate levels contribute
-    # their SA features; the finest level contributes raw xyz(+input feats).
-    coarse_xyz, coarse_f = levels[-1]
-    n_fp = len(params["fp"])
-    for i, fp_p in enumerate(params["fp"]):
-        fine_xyz, fine_f = levels[n_fp - 1 - i]
-        idx, dist = jax.vmap(lambda q, r: Q.knn(q, r, 3))(fine_xyz, coarse_xyz)
-        w = Q.three_nn_interpolate_weights(dist)
-        interp = jax.vmap(G.interpolate_features)(coarse_f, idx, w)  # (B, Nf, Cc)
-        if i == n_fp - 1:  # finest level: raw inputs as skip
-            skip = fine_xyz if fine_f is None else jnp.concatenate([fine_xyz, fine_f], -1)
-        else:
-            skip = fine_f
-        x = jnp.concatenate([interp, skip], axis=-1)
-        coarse_f = nn.mlp_apply(fp_p, x, policy=policy)
-        coarse_xyz = fine_xyz
-    return nn.mlp_apply(params["head"], coarse_f, final_act=False, policy=policy)
+    Literally the composition of the two stage functions — the sequential
+    path and the pipelined path run the SAME code, so their bitwise
+    equality is true by construction, not by accident of XLA scheduling.
+    """
+    return feature_stage(
+        params, cfg, points, preprocess_stage(cfg, points, policy), policy
+    )
 
 
 def loss_fn(

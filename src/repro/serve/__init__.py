@@ -1,3 +1,14 @@
+"""Serving subsystem — the public surface of the PC2IM serving runtime.
+
+Layered back to front: `queue` (bounded admission, deadlines, futures),
+`scheduler` (shape-bucketed dynamic micro-batching keyed by the full
+ExecutionPolicy — pipeline schedule included), `dispatch` (per-device
+replica pool with heartbeat eviction and the two-stage pipelined path),
+`metrics`, and `runtime` (the `ServingRuntime` facade most callers want).
+`pointcloud` / `step` are the synchronous per-batch serve functions.  See
+docs/ARCHITECTURE.md for the dataflow diagram.
+"""
+
 from repro.serve.dispatch import NoReplicaAvailable, Replica, ReplicaPool  # noqa: F401
 from repro.serve.metrics import BatchRecord, MetricsSnapshot, ServeMetrics  # noqa: F401
 from repro.serve.pointcloud import (  # noqa: F401

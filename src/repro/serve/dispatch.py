@@ -5,9 +5,10 @@ entry and executes micro-batches on its own single worker thread, so B
 replicas give B-way compute overlap while every batch still runs on exactly
 one device.  Health is delegated to `runtime/fault_tolerance.py`:
 
-  * HeartbeatMonitor — a pump thread feeds a no-op beat through the
-    replica's worker queue every timeout/4; a wedged worker (hung kernel,
-    dead device) stops beating and the monitor evicts the replica.  The
+  * HeartbeatMonitor — a pump thread feeds a no-op beat through each of the
+    replica's executor queues every timeout/4 (worker AND feature thread,
+    so pipelined batches are covered too); a wedged thread (hung kernel,
+    dead device) stops beating and its monitor evicts the replica.  The
     timeout must therefore exceed the worst-case batch latency.
   * StragglerMonitor — per-batch wall time; slow-but-alive replicas are
     recorded (metrics.straggler_events) for the operator, not evicted.
@@ -51,7 +52,17 @@ class _Entry:
 
 
 class Replica:
-    """One device-pinned executor: params copy + single worker thread."""
+    """One device-pinned executor: params copy + single worker thread.
+
+    Batches under a `pipeline="pipelined"` policy additionally use a second
+    single-thread executor: the worker thread dispatches the preprocess
+    sub-artifact asynchronously and hands completion to the feature thread,
+    so while batch k's feature MLPs run, the worker is already preprocessing
+    batch k+1 — per-replica stage overlap.  Both executors are constructed
+    eagerly (threads spawn on first use), so shutdown/eviction can never
+    race a lazy creation; when liveness is enabled, each executor gets its
+    own heartbeat pump, so a wedge in EITHER stage evicts the replica.
+    """
 
     def __init__(self, rid: int, device, params, *, on_straggler=None):
         self.id = rid
@@ -62,18 +73,65 @@ class Replica:
         self.inflight: dict[int, _Entry] = {}
         self.straggler = StragglerMonitor(on_straggler=on_straggler)
         self.heartbeat: HeartbeatMonitor | None = None
+        self.feature_heartbeat: HeartbeatMonitor | None = None
         self._executor = ThreadPoolExecutor(
             max_workers=1, thread_name_prefix=f"pc2im-replica-{rid}"
         )
+        # constructed eagerly so shutdown()/eviction can never race a lazy
+        # creation and leak it.  ThreadPoolExecutor spawns its thread only on
+        # first submit, so with liveness DISABLED sequential-only replicas pay
+        # nothing; with heartbeats on, the feature pump's beats spawn it (the
+        # price of covering a wedge in either stage)
+        self._feature_executor = ThreadPoolExecutor(
+            max_workers=1, thread_name_prefix=f"pc2im-replica-{rid}-feat"
+        )
+        # double-buffer bound on preprocessed-but-unconsumed batches: without
+        # it a burst would let the worker race arbitrarily far ahead,
+        # materializing every batch's device-resident intermediates at once
+        self._handoff_slots = threading.BoundedSemaphore(2)
+
+    def acquire_handoff(self):
+        """Block until a staged-batch slot frees (double buffering).
+
+        Applies the same backpressure `two_stage_schedule`'s bounded queue
+        gives the local executor: at most two batches may sit preprocessed
+        but not yet consumed by the feature thread.  Raises RuntimeError if
+        the replica dies while waiting, so a blocked worker task converts to
+        a retry instead of hanging.
+        """
+        while not self._handoff_slots.acquire(timeout=0.1):
+            if not self.alive:
+                raise RuntimeError(f"replica {self.id} shut down during hand-off wait")
+
+    def release_handoff(self):
+        """Free a staged-batch slot (feature stage consumed its input)."""
+        self._handoff_slots.release()
 
     def submit(self, fn, *args) -> Future:
+        """Run fn on the replica's worker thread (admission order preserved)."""
         return self._executor.submit(fn, *args)
 
+    def submit_feature(self, fn, *args) -> Future:
+        """Run fn on the feature-stage thread (pipelined batches only).
+
+        Single-threaded, so feature stages of consecutive batches stay
+        ordered per replica.
+        """
+        return self._feature_executor.submit(fn, *args)
+
     def shutdown(self):
+        """Stop both stage executors without waiting.
+
+        In-flight work is abandoned; the pool re-dispatches it elsewhere or
+        fails its futures.
+        """
         self.alive = False
         if self.heartbeat is not None:
             self.heartbeat.stop()
+        if self.feature_heartbeat is not None:
+            self.feature_heartbeat.stop()
         self._executor.shutdown(wait=False)
+        self._feature_executor.shutdown(wait=False)
 
 
 class ReplicaPool:
@@ -113,27 +171,44 @@ class ReplicaPool:
                     heartbeat_timeout_s,
                     on_dead=lambda rid=rep.id: self.evict(rid, reason="heartbeat"),
                 ).start()
-                pump = threading.Thread(
-                    target=self._pump, args=(rep,), daemon=True,
-                    name=f"pc2im-hb-pump-{rep.id}",
-                )
-                pump.start()
-                self._pumps.append(pump)
+                rep.feature_heartbeat = HeartbeatMonitor(
+                    heartbeat_timeout_s,
+                    on_dead=lambda rid=rep.id: self.evict(
+                        rid, reason="feature-heartbeat"
+                    ),
+                ).start()
+                for tag, submit, monitor in (
+                    ("", rep.submit, rep.heartbeat),
+                    ("-feat", rep.submit_feature, rep.feature_heartbeat),
+                ):
+                    pump = threading.Thread(
+                        target=self._pump, args=(rep, submit, monitor),
+                        daemon=True, name=f"pc2im-hb-pump-{rep.id}{tag}",
+                    )
+                    pump.start()
+                    self._pumps.append(pump)
 
     # -- health ---------------------------------------------------------------
 
-    def _pump(self, rep: Replica):
-        """Route beats THROUGH the worker queue: a wedged worker stops
-        beating, which is exactly the liveness signal we want."""
-        period = rep.heartbeat.timeout_s / 4
+    def _pump(self, rep: Replica, submit, monitor):
+        """Route beats THROUGH one of the replica's executor queues.
+
+        A wedged thread stops beating, which is exactly the liveness signal
+        we want.  Each stage executor gets its own pump + monitor: the
+        worker thread never blocks on device work for pipelined batches, so
+        a hung feature stage is only observable through the feature
+        executor's queue.
+        """
+        period = monitor.timeout_s / 4
         while rep.alive:
             try:
-                rep.submit(rep.heartbeat.beat)
+                submit(monitor.beat)
             except RuntimeError:  # executor shut down under us
                 return
             time.sleep(period)
 
     def alive_replicas(self) -> list[Replica]:
+        """Replicas currently considered healthy (dispatch candidates)."""
         with self._lock:
             return [r for r in self.replicas if r.alive]
 
@@ -215,40 +290,114 @@ class ReplicaPool:
                 rep.inflight.pop(entry.seq, None)
             return
         mb = entry.mb
+        if getattr(mb.policy, "pipeline", "sequential") == "pipelined":
+            self._execute_pipelined(rep, entry)
+            return
         try:
             accel = get_accelerator(self.model_cfg, mb.policy)
             rep.straggler.step_start()
             batch = jax.device_put(jnp.asarray(mb.batch), rep.device)
             logits = np.asarray(jax.block_until_ready(accel.infer(rep.params, batch)))
             dt = rep.straggler.step_end(rep.n_batches)
-            rep.n_batches += 1
             if rep.heartbeat is not None:
                 rep.heartbeat.beat()
-            with self._lock:
-                rep.inflight.pop(entry.seq, None)
-            # exactly-one-winner: an evicted-but-still-running replica can
-            # race its batch's re-dispatched copy to this future — only the
-            # completion that lands records the batch, so metrics count each
-            # logical micro-batch once
-            if try_set_result(entry.future, logits):
-                self.metrics.record_batch(BatchRecord(
-                    bucket=mb.bucket,
-                    policy_key=(mb.policy.quant, mb.policy.backend),
-                    n_real=mb.n_real,
-                    batch_size=mb.batch.shape[0],
-                    replica_id=rep.id,
-                    duration_s=dt,
-                ))
+            self._record_success(rep, entry, logits, dt)
         except Exception as e:  # noqa: BLE001 — any device/kernel failure
             with self._lock:
                 rep.inflight.pop(entry.seq, None)
             self._retry(entry, rep.id, e)
 
+    def _record_success(self, rep: Replica, entry: _Entry, logits, dt: float):
+        """Success bookkeeping shared by the sequential and pipelined paths.
+
+        exactly-one-winner: an evicted-but-still-running replica can race
+        its batch's re-dispatched copy to this future — only the completion
+        that lands records the batch, so metrics count each logical
+        micro-batch once.  n_batches is under the pool lock because the
+        worker AND feature threads both count here under mixed schedules.
+        """
+        mb = entry.mb
+        with self._lock:
+            rep.n_batches += 1
+            rep.inflight.pop(entry.seq, None)
+        if try_set_result(entry.future, logits):
+            self.metrics.record_batch(BatchRecord(
+                bucket=mb.bucket,
+                policy_key=(mb.policy.quant, mb.policy.backend, mb.policy.pipeline),
+                n_real=mb.n_real,
+                batch_size=mb.batch.shape[0],
+                replica_id=rep.id,
+                duration_s=dt,
+            ))
+
+    def _execute_pipelined(self, rep: Replica, entry: _Entry):
+        """Two-stage execution of one batch on the replica.
+
+        Preprocess runs on the worker thread (async dispatch, never blocked
+        on), the feature MLPs on the feature thread.
+        The worker returns as soon as the feature stage is handed off, so it
+        starts preprocessing the NEXT queued batch while this one's feature
+        MLPs run — the Mesorasi-style overlap, per replica.  Liveness: each
+        stage executor has its own heartbeat pump (when enabled), so a
+        wedged feature thread stops the feature beats and the replica is
+        evicted, re-dispatching its in-flight batches — the same coverage
+        the sequential path gets from the worker pump.  Straggler tracking
+        is skipped for pipelined batches (overlapping spans would corrupt
+        its single-slot timer); BatchRecord.duration_s is measured directly.
+        """
+        mb = entry.mb
+        try:
+            accel = get_accelerator(self.model_cfg, mb.policy)
+            rep.acquire_handoff()  # double-buffer bound (released by feature stage)
+            try:
+                batch = jax.device_put(jnp.asarray(mb.batch), rep.device)
+                pre = accel.preprocess_stage(batch)  # async — hand off, don't block
+                if rep.heartbeat is not None:
+                    rep.heartbeat.beat()
+                rep.submit_feature(self._finish_pipelined, rep, entry, accel, batch, pre)
+            except Exception:
+                rep.release_handoff()  # the feature stage will never run for us
+                raise
+        except Exception as e:  # noqa: BLE001 — dispatch/executor failure
+            with self._lock:
+                rep.inflight.pop(entry.seq, None)
+            self._retry(entry, rep.id, e)
+
+    def _finish_pipelined(self, rep: Replica, entry: _Entry, accel, batch, pre):
+        try:
+            if entry.future.done():  # re-dispatched after eviction while queued
+                with self._lock:
+                    rep.inflight.pop(entry.seq, None)
+                return
+            # timed from HERE, not worker dispatch: queue wait behind earlier
+            # batches' feature stages is pipeline overlap, not this batch's
+            # cost (block_until_ready still charges any unfinished preprocess
+            # through the data dependency)
+            t0 = time.monotonic()
+            try:
+                logits = np.asarray(
+                    jax.block_until_ready(accel.feature_stage(rep.params, batch, pre))
+                )
+                dt = time.monotonic() - t0
+                if rep.feature_heartbeat is not None:
+                    rep.feature_heartbeat.beat()
+                self._record_success(rep, entry, logits, dt)
+            except Exception as e:  # noqa: BLE001 — any device/kernel failure
+                with self._lock:
+                    rep.inflight.pop(entry.seq, None)
+                self._retry(entry, rep.id, e)
+        finally:
+            rep.release_handoff()
+
     # -- lifecycle ------------------------------------------------------------
 
     def warmup(self, mb):
-        """Compile + run one batch synchronously on EVERY alive replica (the
-        runtime uses this to pre-trace each (bucket, policy) artifact)."""
+        """Compile + run one batch synchronously on EVERY alive replica.
+
+        The runtime uses this to pre-trace each (bucket, policy) artifact —
+        for pipelined policies this drives the two-stage path, so BOTH
+        sub-artifacts are traced before real traffic arrives.
+        """
         futs = []
         for rep in self.alive_replicas():
             entry = _Entry(mb, Future(), attempts=self.max_retries, tried=frozenset())
@@ -262,5 +411,6 @@ class ReplicaPool:
             f.result(timeout=300)
 
     def shutdown(self):
+        """Stop every replica (abandoning in-flight batches)."""
         for rep in self.replicas:
             rep.shutdown()

@@ -25,7 +25,7 @@ class BatchRecord:
     """One executed micro-batch (who ran it, how full it was)."""
 
     bucket: int  # static n_points shape the batch was padded to
-    policy_key: tuple  # (quant, backend) of the batch's ExecutionPolicy
+    policy_key: tuple  # (quant, backend, pipeline) of the batch's ExecutionPolicy
     n_real: int  # real requests in the batch (rest is filler)
     batch_size: int  # static batch dim
     replica_id: int
@@ -34,6 +34,14 @@ class BatchRecord:
 
 @dataclasses.dataclass(frozen=True)
 class MetricsSnapshot:
+    """Immutable reduction of one runtime's metrics at a point in time.
+
+    Counters (submitted..straggler_events) are totals since construction;
+    latency percentiles, throughput and occupancy are computed over the
+    retained reservoirs — exactly the numbers benchmarks and tests assert
+    on (see snapshot() for the definitions).
+    """
+
     submitted: int
     completed: int
     rejected: int
@@ -52,6 +60,7 @@ class MetricsSnapshot:
     queue_depth_max: int
 
     def format_row(self) -> str:
+        """One-line human summary (the serve benchmarks print this)."""
         return (
             f"completed={self.completed} rejected={self.rejected} "
             f"expired={self.expired} thr={self.throughput_rps:.1f}/s "
@@ -82,36 +91,44 @@ class ServeMetrics:
     # -- recording (one lock-protected append each) --------------------------
 
     def record_submitted(self):
+        """Count one admitted request (starts the observation window)."""
         with self._lock:
             self.submitted += 1
             if self._first_t is None:
                 self._first_t = time.monotonic()
 
     def record_rejected(self):
+        """Count one request refused at admission (QueueFull/QueueClosed)."""
         with self._lock:
             self.rejected += 1
 
     def record_expired(self):
+        """Count one request failed because its deadline passed."""
         with self._lock:
             self.expired += 1
 
     def record_failed(self, n: int = 1):
+        """Count n requests failed by execution errors (not deadlines)."""
         with self._lock:
             self.failed += n
 
     def record_retry(self):
+        """Count one batch re-dispatch after a replica failure."""
         with self._lock:
             self.retries += 1
 
     def record_eviction(self):
+        """Count one replica evicted by the heartbeat monitor."""
         with self._lock:
             self.evictions += 1
 
     def record_straggler(self, _event=None):
+        """Count one straggler event (slow-but-alive replica batch)."""
         with self._lock:
             self.straggler_events += 1
 
     def record_completed(self, latency_s: float):
+        """Record one completed request and its end-to-end latency."""
         with self._lock:
             self.completed += 1
             self._last_t = time.monotonic()
@@ -119,11 +136,13 @@ class ServeMetrics:
             del self._latencies[:-_RESERVOIR]
 
     def record_queue_depth(self, depth: int):
+        """Sample the admission-queue depth at a scheduler drain."""
         with self._lock:
             self._depths.append(depth)
             del self._depths[:-_RESERVOIR]
 
     def record_batch(self, record: BatchRecord):
+        """Log one executed micro-batch (occupancy/duration source)."""
         with self._lock:
             self._batches.append(record)
             del self._batches[:-_RESERVOIR]
@@ -132,10 +151,17 @@ class ServeMetrics:
 
     @property
     def batch_records(self) -> tuple[BatchRecord, ...]:
+        """The retained BatchRecord log (newest _RESERVOIR entries)."""
         with self._lock:
             return tuple(self._batches)
 
     def snapshot(self) -> MetricsSnapshot:
+        """Reduce the raw samples to a MetricsSnapshot.
+
+        Throughput is completed requests over the first-submit..last-complete
+        window; occupancy averages n_real/batch_size over batches that
+        carried real traffic (warmup batches are excluded).
+        """
         with self._lock:
             lat = np.asarray(self._latencies, np.float64)
             p50, p95, p99 = (

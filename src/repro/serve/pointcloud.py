@@ -30,6 +30,12 @@ from repro.models import pointnet2 as PN
 
 @dataclasses.dataclass(frozen=True)
 class PointCloudServeConfig:
+    """Knobs of the synchronous batch-serving path (`make_pointcloud_serve_fns`).
+
+    batch_size is the static batch dim every ragged request chunk is padded
+    to — one jit trace regardless of how many clouds a caller hands in.
+    """
+
     batch_size: int = 8  # static serving batch (pad + drop filler rows)
 
 
@@ -50,16 +56,20 @@ def pad_cloud(points: np.ndarray, n_points: int) -> tuple[np.ndarray, int]:
 
 
 def subsample_indices(n: int, n_points: int) -> np.ndarray:
-    """The stride-subsample used by pad_cloud for oversized clouds: which of
-    the n input rows survive.  Exposed so seg callers can map logits back."""
+    """Rows surviving pad_cloud's stride-subsample of an oversized cloud.
+
+    Deterministic (a rounded linspace over the n input rows); exposed so
+    seg callers can map per-point logits back to the original rows.
+    """
     return np.linspace(0, n - 1, n_points).round().astype(np.int64)
 
 
 def inverse_subsample_indices(n: int, n_points: int) -> np.ndarray:
-    """Exact inverse of subsample_indices: for each of the n ORIGINAL rows,
-    the position (in the n_points surviving rows) of its nearest survivor.
+    """Exact inverse of subsample_indices — nearest survivor per original row.
 
-    Guarantees, for any n > n_points >= 1 (property-tested):
+    For each of the n ORIGINAL rows, returns the position (in the n_points
+    surviving rows) of its nearest survivor.  Guarantees, for any
+    n > n_points >= 1 (property-tested):
       * identity  — a row that survived maps to its own slot, so per-point
         logits round-trip bitwise for surviving rows;
       * nearest   — every dropped row maps to the survivor with the smallest

@@ -40,6 +40,7 @@ def try_set_result(future: Future, result) -> bool:
 
 
 def try_set_exception(future: Future, err: Exception) -> bool:
+    """Fail a future if still open; see try_set_result for the race rules."""
     try:
         future.set_exception(err)
         return True
@@ -56,6 +57,8 @@ class AdmissionError(RuntimeError):
 
 
 class QueueFull(AdmissionError):
+    """Admission bound hit — explicit backpressure, never a silent drop."""
+
     def __init__(self, depth: int, max_depth: int):
         super().__init__("queue_full", f"depth {depth} >= max_depth {max_depth}")
         self.depth = depth
@@ -63,6 +66,8 @@ class QueueFull(AdmissionError):
 
 
 class QueueClosed(AdmissionError):
+    """The runtime stopped accepting traffic (stop() closed the queue)."""
+
     def __init__(self):
         super().__init__("closed", "runtime is stopped")
 
@@ -92,9 +97,11 @@ class Request:
 
     @property
     def key(self) -> tuple:
+        """Micro-batching key — requests batch together iff keys match."""
         return (self.bucket, self.policy)
 
     def expired(self, now: float | None = None) -> bool:
+        """Whether the deadline passed (checked at every scheduling stage)."""
         if self.deadline_t is None:
             return False
         return (time.monotonic() if now is None else now) > self.deadline_t
@@ -147,8 +154,10 @@ class AdmissionQueue:
         return req.future
 
     def drain(self, max_items: int, timeout_s: float) -> list[Request]:
-        """Pop up to max_items requests, blocking up to timeout_s for the
-        first one.  Returns [] on timeout or when closed-and-empty."""
+        """Pop up to max_items requests, blocking up to timeout_s for the first.
+
+        Returns [] on timeout or when the queue is closed and empty.
+        """
         deadline = time.monotonic() + timeout_s
         with self._cond:
             while not self._items and not self._closed:
@@ -161,17 +170,22 @@ class AdmissionQueue:
             return out
 
     def depth(self) -> int:
+        """Number of requests currently waiting (the backpressure signal)."""
         with self._cond:
             return len(self._items)
 
     @property
     def closed(self) -> bool:
+        """Whether close() ran — further submits raise QueueClosed."""
         with self._cond:
             return self._closed
 
     def close(self) -> list[Request]:
-        """Refuse new admissions and return whatever was still queued (the
-        runtime flushes these through one final scheduling pass)."""
+        """Refuse new admissions and return whatever was still queued.
+
+        The runtime flushes the returned requests through one final
+        scheduling pass (drain=True) or cancels them (drain=False).
+        """
         with self._cond:
             self._closed = True
             left = list(self._items)

@@ -9,9 +9,13 @@
         print(rt.metrics.snapshot().format_row())
 
 One runtime owns one model config; per-request `ExecutionPolicy` selects the
-numeric path (fp32 vs SC W16A16) and the scheduler guarantees a micro-batch
-never mixes policies or shape buckets, so every batch resolves to exactly
-one cached `PC2IMAccelerator` artifact and one jit trace.
+numeric path (fp32 vs SC W16A16) AND the execution schedule
+(`pipeline="pipelined"` routes the batch group through the replica's
+two-stage overlapped path — preprocess batch k+1 while batch k's feature
+MLPs run).  The scheduler guarantees a micro-batch never mixes policies or
+shape buckets, so every batch resolves to exactly one cached
+`PC2IMAccelerator` artifact and one jit trace, and pipelined vs sequential
+batch groups never share an artifact.
 """
 
 from __future__ import annotations
@@ -51,6 +55,16 @@ class RuntimeConfig:
 
 
 class ServingRuntime:
+    """The user-facing serving facade: queue -> scheduler -> replica pool.
+
+    One instance owns one model config and one params copy per replica;
+    `submit` admits ragged clouds and returns per-request futures, with
+    the numeric mode and execution schedule chosen per request through an
+    ExecutionPolicy.  Use as a context manager (`with ServingRuntime(...)`)
+    or call start()/stop() explicitly; see the module docstring for a
+    worked example.
+    """
+
     def __init__(
         self,
         model_cfg,
@@ -92,6 +106,7 @@ class ServingRuntime:
     # -- lifecycle ------------------------------------------------------------
 
     def start(self):
+        """Start the scheduler thread (idempotent); returns self."""
         if self._stopped:
             # the drain thread is joined and the queue closed; a half-revived
             # runtime would accept submits it can never serve
@@ -127,9 +142,13 @@ class ServingRuntime:
         self.stop()
 
     def warmup(self, policies: tuple[ExecutionPolicy | None, ...] = (None,)):
-        """Pre-trace every (bucket, policy) artifact on every replica so the
-        first real request never pays compile latency (and load benchmarks
-        measure serving, not tracing)."""
+        """Pre-trace every (bucket, policy) artifact on every replica.
+
+        The first real request then never pays compile latency (and load
+        benchmarks measure serving, not tracing).  A policy with
+        pipeline="pipelined" warms both staged sub-artifacts through the
+        replica's two-stage path.
+        """
         width = 3 + self.model_cfg.in_features
         for pol in policies:
             resolved = resolve_policy(self.model_cfg, pol)

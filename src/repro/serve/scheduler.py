@@ -12,7 +12,11 @@ admission queue and groups requests by `(bucket, policy)`:
     mapping" idea applied to shapes).
   * policy — the resolved ExecutionPolicy.  A batch never mixes policies,
     so fp32 and SC W16A16 traffic can interleave at the request level while
-    each micro-batch still hits exactly one (config, policy) artifact.
+    each micro-batch still hits exactly one (config, policy) artifact.  The
+    policy's `pipeline` knob participates in the key too: batches under a
+    "pipelined" policy run the replica's two-stage overlapped schedule
+    (dispatch.py) while "sequential" batches run the fused artifact, and
+    the two kinds of traffic NEVER share a micro-batch or an artifact.
 
 A key flushes when it holds `max_batch` requests or its oldest request has
 waited `max_wait_s` — the classic dynamic-batching latency/occupancy knob.
@@ -43,6 +47,8 @@ from repro.serve.queue import (
 
 @dataclasses.dataclass(frozen=True)
 class SchedulerConfig:
+    """Dynamic-batching knobs: batch size, flush latency, drain granularity."""
+
     max_batch: int = 8  # static batch dim of every micro-batch
     max_wait_s: float = 0.005  # flush a partial batch after this long
     drain_tick_s: float = 0.002  # scheduler wake-up granularity
@@ -59,12 +65,16 @@ class MicroBatch:
 
     @property
     def n_real(self) -> int:
+        """Real requests in the batch; rows beyond this are zero filler."""
         return len(self.requests)
 
 
 def bucket_for(n: int, buckets: Sequence[int]) -> int:
-    """Smallest bucket that holds an n-row cloud; oversized clouds take the
-    largest bucket (and stride-subsample down to it, like pad_cloud)."""
+    """Smallest bucket that holds an n-row cloud.
+
+    Oversized clouds take the largest bucket (and stride-subsample down to
+    it, like pad_cloud).
+    """
     for b in buckets:
         if n <= b:
             return b
@@ -74,9 +84,12 @@ def bucket_for(n: int, buckets: Sequence[int]) -> int:
 def assemble_batch(
     requests: Sequence[Request], bucket: int, width: int, max_batch: int
 ) -> np.ndarray:
-    """Pure batch assembly: fit each request's cloud to `bucket` rows via
-    pad_cloud, zero-pad filler batch rows.  Shared with tests so scheduler
-    batches are bitwise-reproducible outside the runtime."""
+    """Pure batch assembly onto the static (max_batch, bucket, width) shape.
+
+    Each request's cloud is fitted to `bucket` rows via pad_cloud; filler
+    batch rows stay zero.  Shared with tests so scheduler batches are
+    bitwise-reproducible outside the runtime.
+    """
     batch = np.zeros((max_batch, bucket, width), np.float32)
     for i, req in enumerate(requests):
         batch[i] = pad_cloud(np.asarray(req.cloud, np.float32), bucket)[0]
@@ -142,12 +155,16 @@ class BatchScheduler:
     # -- lifecycle ------------------------------------------------------------
 
     def start(self):
+        """Start the background drain thread; returns self for chaining."""
         self._thread.start()
         return self
 
     def stop(self, drain: bool = True):
-        """Stop the loop; drain=True flushes queued + pending requests and
-        waits for their batches to complete first."""
+        """Stop the drain loop.
+
+        drain=True flushes queued + pending requests and waits for their
+        batches to complete first; drain=False cancels them.
+        """
         self._stop.set()
         self._thread.join()
         leftovers = self.queue.close()

@@ -15,6 +15,12 @@ from repro.models.families import get_family_api
 
 
 def make_serve_fns(cfg: ModelConfig, policy: ExecutionPolicy | None = None):
+    """Serving closures {"prefill", "decode", "generate"} for one LM config.
+
+    Every closure is pinned to the resolved ExecutionPolicy, so concurrent
+    servers holding different policies (e.g. fp32 next to SC W16A16) share
+    no state and can never observe each other's numeric mode.
+    """
     api = get_family_api(cfg)
     policy = resolve_policy(cfg, policy)
 
@@ -22,8 +28,11 @@ def make_serve_fns(cfg: ModelConfig, policy: ExecutionPolicy | None = None):
         return api["prefill"](params, cfg, batch, s_max, policy=policy)
 
     def decode_step(params, state, batch):
-        """One token for the whole batch; greedy next token included so the
-        lowered artifact covers the sampling epilogue."""
+        """One token for the whole batch.
+
+        The greedy next token is included so the lowered artifact covers
+        the sampling epilogue.
+        """
         logits, state = api["decode_step"](params, cfg, state, batch, policy=policy)
         next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
         return logits, next_tok, state

@@ -1,0 +1,331 @@
+"""Pipelined accelerator tests: staged sub-artifacts, the ExecutionPolicy
+pipeline knob, the two-stage schedule, and mixed pipelined/sequential
+serving.
+
+The contract under test (ISSUE 4's tentpole):
+  * `feature_stage(params, x, preprocess_stage(x))` is bitwise-equal to the
+    fused `infer` — across policies, shapes and tasks — because the fused
+    forward IS that composition;
+  * `PipelinedExecutor` / `infer_pipelined` return the same bits for a
+    whole micro-batch stream, in order;
+  * the `pipeline` knob participates in ExecutionPolicy hashing and the
+    accelerator cache key (pipelined and sequential traffic can never
+    collide on one artifact);
+  * the serving runtime executes pipelined and sequential batch groups side
+    by side, each bitwise-equal to the direct sequential path.
+"""
+
+import concurrent.futures
+import dataclasses
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.core.accelerator import (
+    PipelinedExecutor,
+    cache_stats,
+    clear_cache,
+    get_accelerator,
+)
+from repro.core.policy import ExecutionPolicy, resolve_policy
+from repro.data.pointclouds import sample_batch
+from repro.parallel.pipeline import two_stage_schedule
+from repro.serve import (
+    MicroBatch,
+    ReplicaPool,
+    RuntimeConfig,
+    ServeMetrics,
+    ServingRuntime,
+    assemble_batch,
+)
+from repro.serve.queue import Request
+
+jax.config.update("jax_platform_name", "cpu")
+
+WAIT_S = 60  # bound on every future wait: fail, never hang
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return get_config("pointnet2-cls", smoke=True)  # n_points=256
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    return get_accelerator(cfg).init(jax.random.PRNGKey(0))
+
+
+def _batches(cfg, k, b=4, seed=0, n=None):
+    n = n or cfg.n_points
+    return [
+        np.asarray(sample_batch(jax.random.PRNGKey(seed + i), b, n)[0])
+        for i in range(k)
+    ]
+
+
+class TestPipelineKnob:
+    def test_validation(self):
+        with pytest.raises(ValueError, match="pipeline"):
+            ExecutionPolicy(pipeline="overlapped")
+
+    def test_hash_identity(self):
+        seq = ExecutionPolicy()
+        pipe = ExecutionPolicy(pipeline="pipelined")
+        assert seq != pipe
+        assert len({seq, pipe, ExecutionPolicy(pipeline="sequential")}) == 2
+
+    def test_resolve_preserves_pipeline(self, cfg):
+        pol = ExecutionPolicy(quant="sc_w16a16", pipeline="pipelined")
+        assert resolve_policy(cfg, pol).pipeline == "pipelined"
+        assert resolve_policy(cfg, None).pipeline == "sequential"
+
+    def test_cache_keys_never_collide(self, cfg):
+        """Round-trip through the artifact cache: same (config, quant,
+        backend) but different pipeline modes -> two distinct artifacts,
+        and the stats keys name both."""
+        clear_cache()
+        a = get_accelerator(cfg, ExecutionPolicy(backend="xla"))
+        b = get_accelerator(cfg, ExecutionPolicy(backend="xla", pipeline="pipelined"))
+        assert a is not b
+        stats = cache_stats()
+        assert stats.size == 2 and stats.misses == 2
+        assert {key[-1] for key in stats.keys} == {"sequential", "pipelined"}
+        # identical policies still share one artifact
+        assert b is get_accelerator(
+            cfg, ExecutionPolicy(backend="xla", pipeline="pipelined")
+        )
+
+
+class TestStagedParity:
+    @pytest.mark.parametrize("quant", ["none", "sc_w16a16", "sc_w8a8"])
+    def test_staged_equals_fused_per_policy(self, cfg, params, quant):
+        accel = get_accelerator(cfg, ExecutionPolicy(quant=quant, backend="xla"))
+        pts = _batches(cfg, 1, b=2, seed=7)[0]
+        fused = np.asarray(accel.infer(params, pts))
+        pre = accel.preprocess_stage(pts)
+        staged = np.asarray(accel.feature_stage(params, pts, pre))
+        np.testing.assert_array_equal(fused, staged, err_msg=quant)
+
+    def test_staged_equals_fused_across_buckets(self, cfg, params):
+        """Both serving buckets (192 and 256 rows) stay bitwise-equal —
+        every static shape gets its own pair of sub-artifact traces."""
+        accel = get_accelerator(cfg)
+        for n in (192, 256):
+            pts = _batches(cfg, 1, b=4, seed=11, n=n)[0]
+            fused = np.asarray(accel.infer(params, pts))
+            pre = accel.preprocess_stage(pts)
+            np.testing.assert_array_equal(
+                fused, np.asarray(accel.feature_stage(params, pts, pre)), err_msg=str(n)
+            )
+
+    def test_staged_equals_fused_segmentation(self):
+        """The FP (feature-propagation) tail also composes: seg logits from
+        the staged path match the fused artifact bit for bit."""
+        seg = get_config("pointnet2-seg", smoke=True)
+        accel = get_accelerator(seg, ExecutionPolicy(backend="xla"))
+        params = accel.init(jax.random.PRNGKey(2))
+        pts = _batches(seg, 1, b=2, seed=13, n=seg.n_points)[0]
+        fused = np.asarray(accel.infer(params, pts))
+        pre = accel.preprocess_stage(pts)
+        np.testing.assert_array_equal(
+            fused, np.asarray(accel.feature_stage(params, pts, pre))
+        )
+
+    def test_preprocess_stage_is_params_free(self, cfg, params):
+        """The preprocess sub-artifact reads only coordinates: different
+        params, same neighborhoods (what makes the overlap legal)."""
+        accel = get_accelerator(cfg)
+        pts = _batches(cfg, 1, b=2, seed=17)[0]
+        pre = accel.preprocess_stage(pts)
+        other = get_accelerator(cfg).init(jax.random.PRNGKey(99))
+        out_a = np.asarray(accel.feature_stage(params, pts, pre))
+        out_b = np.asarray(accel.feature_stage(other, pts, pre))
+        assert not np.array_equal(out_a, out_b)  # params DID matter downstream
+        for got, want in zip(
+            jax.tree.leaves(pre), jax.tree.leaves(accel.preprocess_stage(pts))
+        ):
+            np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+class TestPipelinedExecutor:
+    def test_stream_parity_and_order(self, cfg, params):
+        """A stream of distinct micro-batches comes back in order, each
+        bitwise-equal to the sequential fused infer."""
+        accel = get_accelerator(cfg, ExecutionPolicy(pipeline="pipelined"))
+        batches = _batches(cfg, 6, b=4, seed=23)
+        outs = accel.infer_pipelined(params, batches)
+        assert len(outs) == len(batches)
+        ref = get_accelerator(cfg)  # sequential artifact, same resolved numerics
+        for i, (out, x) in enumerate(zip(outs, batches)):
+            np.testing.assert_array_equal(
+                np.asarray(out), np.asarray(ref.infer(params, x)), err_msg=str(i)
+            )
+
+    def test_quantized_stream_parity(self, cfg, params):
+        pol = ExecutionPolicy(quant="sc_w16a16", backend="xla", pipeline="pipelined")
+        accel = get_accelerator(cfg, pol)
+        seq = get_accelerator(cfg, dataclasses.replace(pol, pipeline="sequential"))
+        batches = _batches(cfg, 3, b=2, seed=29)
+        for out, x in zip(accel.infer_pipelined(params, batches), batches):
+            np.testing.assert_array_equal(
+                np.asarray(out), np.asarray(seq.infer(params, x))
+            )
+
+    def test_executor_empty_stream(self, cfg, params):
+        assert PipelinedExecutor(get_accelerator(cfg)).run(params, []) == []
+
+
+class TestTwoStageSchedule:
+    def test_order_and_composition(self):
+        out = two_stage_schedule(lambda x: x * 10, lambda y: y + 1, range(20), depth=2)
+        assert out == [i * 10 + 1 for i in range(20)]
+
+    def test_stage_a_exception_propagates(self):
+        def bad(x):
+            if x == 3:
+                raise RuntimeError("stage a boom")
+            return x
+
+        with pytest.raises(RuntimeError, match="stage a boom"):
+            two_stage_schedule(bad, lambda y: y, range(8), depth=1)
+
+    def test_stage_b_exception_propagates(self):
+        def bad(y):
+            if y == 2:
+                raise RuntimeError("stage b boom")
+            return y
+
+        # depth=1 forces the producer to block on a full hand-off queue while
+        # the consumer dies — the drain path must still unblock and join it
+        with pytest.raises(RuntimeError, match="stage b boom"):
+            two_stage_schedule(lambda x: x, bad, range(8), depth=1)
+
+    def test_empty(self):
+        assert two_stage_schedule(lambda x: x, lambda y: y, []) == []
+
+
+class TestServeMixedSchedules:
+    def test_mixed_pipelined_and_sequential_groups(self, cfg, params):
+        """Interleaved pipelined/sequential submissions: the scheduler keys
+        batch groups by the full policy (pipeline included), every request
+        completes, and each result is bitwise-equal to the direct sequential
+        path on the same padded batch."""
+        clear_cache()
+        pipe = ExecutionPolicy(pipeline="pipelined")
+        clouds = [
+            np.asarray(sample_batch(jax.random.PRNGKey(41 + i), 1, 256)[0][0])
+            for i in range(16)
+        ]
+        rt = ServingRuntime(
+            cfg, params,
+            RuntimeConfig(max_batch=4, max_wait_s=0.005, max_queue=64, buckets=(256,)),
+        )
+        with rt:
+            futs = [
+                rt.submit(c, policy=pipe if i % 2 else None)
+                for i, c in enumerate(clouds)
+            ]
+            outs = [f.result(timeout=WAIT_S) for f in futs]
+
+        accel = get_accelerator(cfg)
+        for i, (cloud, out) in enumerate(zip(clouds, outs)):
+            req = Request(id=i, cloud=cloud, n_orig=256, bucket=256, policy=None,
+                          deadline_t=None, submit_t=0.0, future=None)
+            direct = np.asarray(accel.infer(params, assemble_batch([req], 256, 3, 4)))[0]
+            np.testing.assert_array_equal(out, direct, err_msg=str(i))
+
+        stats = cache_stats()
+        assert {key[-1] for key in stats.keys} == {"sequential", "pipelined"}
+        records = [b for b in rt.metrics.batch_records if b.n_real]
+        assert sum(b.n_real for b in records) == len(clouds)
+        # metrics separate the two schedules too (per-schedule durations)
+        assert {b.policy_key[-1] for b in records} == {"sequential", "pipelined"}
+
+    def test_concurrent_threads_mixed_schedules(self, cfg, params):
+        """8 threads hammering both schedules at once: all complete, all
+        bitwise-correct (no cross-talk between the two artifact kinds)."""
+        pipe = ExecutionPolicy(pipeline="pipelined")
+        clouds = [
+            np.asarray(sample_batch(jax.random.PRNGKey(71 + i), 1, 256)[0][0])
+            for i in range(24)
+        ]
+        rt = ServingRuntime(
+            cfg, params,
+            RuntimeConfig(max_batch=4, max_wait_s=0.005, max_queue=128, buckets=(256,)),
+        )
+        with rt:
+            with concurrent.futures.ThreadPoolExecutor(max_workers=8) as ex:
+                futs = list(ex.map(
+                    lambda i: rt.submit(clouds[i], policy=pipe if i % 2 else None),
+                    range(len(clouds)),
+                ))
+            outs = [f.result(timeout=WAIT_S) for f in futs]
+
+        accel = get_accelerator(cfg)
+        for i, (cloud, out) in enumerate(zip(clouds, outs)):
+            req = Request(id=i, cloud=cloud, n_orig=256, bucket=256, policy=None,
+                          deadline_t=None, submit_t=0.0, future=None)
+            direct = np.asarray(accel.infer(params, assemble_batch([req], 256, 3, 4)))[0]
+            np.testing.assert_array_equal(out, direct, err_msg=str(i))
+
+    def test_wedged_feature_stage_evicts_replica(self, cfg, params):
+        """Feature-thread liveness: a hung feature stage stalls the feature
+        executor's heartbeat pump, the replica is evicted, and the batch is
+        re-dispatched to a survivor (same coverage the sequential path gets
+        from the worker pump)."""
+        pol = resolve_policy(cfg, ExecutionPolicy(pipeline="pipelined"))
+        accel = get_accelerator(cfg, pol)  # the cached artifact dispatch will use
+        orig = accel.feature_stage
+        mb = MicroBatch(
+            requests=(), bucket=cfg.n_points, policy=pol,
+            batch=np.zeros((2, cfg.n_points, 3), np.float32),
+        )
+        # warm through the pool's OWN path (device-committed params/batch):
+        # execution under the heartbeat pool must be compile-free, or
+        # compilation itself (seconds) stalls the beats and evicts healthy
+        # replicas — that's also why the prod docstring says the timeout must
+        # exceed worst-case batch latency
+        warm_pool = ReplicaPool(cfg, params, n_replicas=1)
+        warm_pool.warmup(mb)
+        warm_pool.shutdown()
+
+        state = {"calls": 0}
+
+        def wedge_first_call(p, pts, pre):
+            state["calls"] += 1
+            if state["calls"] == 1:
+                time.sleep(3.0)  # >> heartbeat timeout: beats stall behind us
+            return orig(p, pts, pre)
+
+        accel.feature_stage = wedge_first_call
+        metrics = ServeMetrics()
+        pool = ReplicaPool(
+            cfg, params, n_replicas=2, heartbeat_timeout_s=0.6,
+            max_retries=2, metrics=metrics,
+        )
+        try:
+            out = pool.submit(mb).result(timeout=WAIT_S)
+            assert out.shape[0] == 2
+            assert state["calls"] >= 2  # the wedged call plus the retry
+            assert metrics.evictions >= 1 and metrics.retries >= 1
+        finally:
+            accel.feature_stage = orig  # un-wedge the cached artifact
+            pool.shutdown()
+            time.sleep(0.2)  # let the wedged sleeper drain before other tests
+
+    def test_warmup_pretraces_pipelined_artifacts(self, cfg, params):
+        """warmup() with a pipelined policy drives the replica's two-stage
+        path end to end (both sub-artifacts traced before traffic)."""
+        rt = ServingRuntime(
+            cfg, params,
+            RuntimeConfig(max_batch=4, max_wait_s=0.005, buckets=(256,)),
+        )
+        try:
+            rt.warmup(policies=(ExecutionPolicy(pipeline="pipelined"),))
+            stats = cache_stats()
+            assert "pipelined" in {key[-1] for key in stats.keys}
+        finally:
+            rt.stop()

@@ -203,7 +203,7 @@ class TestMixedPolicies:
 
         stats = cache_stats()
         assert stats.size == 2
-        assert sorted(q for _, q, _ in stats.keys) == ["none", "sc_w16a16"]
+        assert sorted(q for _, q, *_ in stats.keys) == ["none", "sc_w16a16"]
 
         for pol, idxs in ((None, (0, 2, 4, 6)), (quant, (1, 3, 5, 7))):
             accel = get_accelerator(cfg, pol)
@@ -413,7 +413,7 @@ class TestCacheIntrospection:
         assert a is b
         s1 = cache_stats()
         assert (s1.hits, s1.misses, s1.size) == (1, 1, 1)
-        assert s1.keys == ((cfg.name, "none", "auto"),)
+        assert s1.keys == ((cfg.name, "none", "auto", "sequential"),)
         clear_cache()
         assert cache_stats().size == 0
         # fresh instance after clear (old one stays valid for holders)
