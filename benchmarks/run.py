@@ -137,6 +137,16 @@ def serve_bench(smoke: bool = False) -> list[dict]:
     return serve_load.run(smoke=smoke)
 
 
+def serve_cache_bench(smoke: bool = False) -> list[dict]:
+    """Cross-request preprocess cache: cached vs uncached runtime on a
+    temporally-correlated sweep trace (see benchmarks/serve_load.py).
+    ASSERTS hit-rate > 0 on the duplicate trace and bitwise parity of every
+    response vs the uncached path — failures raise and fail the lane."""
+    from benchmarks import serve_load
+
+    return serve_load.run_cache(smoke=smoke)
+
+
 def pipeline_bench(smoke: bool = False) -> list[dict]:
     """Preprocess/feature overlap: PipelinedExecutor vs blocking sequential
     infer over one micro-batch stream (see benchmarks/pipeline_overlap.py)."""
@@ -165,10 +175,14 @@ def main() -> None:
 
     print("name,us_per_call,derived")
     if smoke:
-        # CI lane: the serving-runtime load benchmark + the pipelined-overlap
-        # lane, reduced size — keeps the open-loop path and the stage-overlap
-        # speedup exercised on every push without the full paper-table sweep.
+        # CI lane: the serving-runtime load benchmark, the correlated-sweep
+        # preprocess-cache benchmark (asserting hit-rate > 0 and bitwise
+        # parity vs the uncached path) + the pipelined-overlap lane, reduced
+        # size — keeps the open-loop path, the cache hot path and the
+        # stage-overlap speedup exercised on every push without the full
+        # paper-table sweep.
         _print_rows(serve_bench(smoke=True))
+        _print_rows(serve_cache_bench(smoke=True))
         _print_rows(pipeline_bench(smoke=True))
         return
     for mod_name, kwargs in [
@@ -192,6 +206,7 @@ def main() -> None:
     for row in accelerator_bench():
         print(f"{row['name']},{row['us']:.1f},{row['derived']:.1f} clouds/s")
     _print_rows(serve_bench())
+    _print_rows(serve_cache_bench())
     _print_rows(pipeline_bench())
 
 

@@ -18,6 +18,14 @@ batcher amortises the fixed per-call cost over up to `max_batch` clouds.
 
 Rows (printed by benchmarks/run.py as name,us_per_call,derived):
   serve/{path}_r{mult}x : us = p95 latency; derived = throughput + detail.
+
+`run_cache` is the cross-request preprocess-cache benchmark: a
+temporally-correlated sweep trace (a pool of static scenes visited
+cyclically, duplicate fraction configurable) fired at a cached and an
+uncached ServingRuntime.  It ASSERTS hit-rate > 0 on the duplicate trace
+and bitwise parity of every response against an uncached direct
+recomputation — a failed assertion fails the CI bench-smoke lane.
+  serve_cache/{path}_d{dup} : us = p95 latency; derived = throughput + cache detail.
 """
 
 from __future__ import annotations
@@ -159,5 +167,196 @@ def run(smoke: bool = False, seed: int = 0) -> list[dict]:
             "name": f"serve/speedup_r{mult:g}x",
             "us": float("nan"),
             "note": f"runtime/naive throughput {thr_r / thr_n:.2f}x" if thr_n else "n/a",
+        })
+    return rows
+
+
+def _sweep_trace(n_requests: int, dup_frac: float, n_points: int, width: int, seed: int):
+    """Temporally-correlated sweep trace over a pool of static scenes.
+
+    `n_unique = n_requests * (1 - dup_frac)` distinct scenes are visited
+    cyclically — the multi-camera static-rig pattern where every pass after
+    the first re-observes scenes already served.  Scenes are snapped to the
+    content-hash lattice, so repeats are exact duplicates and EVERY response
+    (hit or miss) must be bitwise-equal to the scene's uncached
+    recomputation; sub-step sensor jitter keying identically is pinned by
+    tests/test_hashing.py.  Returns (scenes, visit order).
+    """
+    import jax
+
+    from repro.data.pointclouds import sample_batch
+    from repro.serve.hashing import DEFAULT_QUANT_STEP
+
+    n_unique = max(1, int(round(n_requests * (1.0 - dup_frac))))
+    pts, _, _ = sample_batch(jax.random.PRNGKey(seed), n_unique, n_points)
+    pts = np.asarray(pts, np.float64)
+    if width > 3:
+        pts = np.concatenate(
+            [pts, np.zeros((*pts.shape[:2], width - 3), np.float64)], axis=-1
+        )
+    step = DEFAULT_QUANT_STEP
+    scenes = [
+        (np.round(pts[i] / step) * step).astype(np.float32) for i in range(n_unique)
+    ]
+    return scenes, [i % n_unique for i in range(n_requests)]
+
+
+class _IndexedSubmit:
+    """submit_fn wrapper keeping (trace index, future) pairs for parity checks."""
+
+    def __init__(self, runtime):
+        self.runtime = runtime
+        self.i = -1
+        self.futs: list[tuple] = []
+
+    def __call__(self, cloud):
+        self.i += 1  # counts every attempt, so indices survive rejections
+        fut = self.runtime.submit(cloud)
+        self.futs.append((self.i, fut))
+        return fut
+
+
+def run_cache(smoke: bool = False, seed: int = 0) -> list[dict]:
+    """Preprocess-cache benchmark: cached vs uncached runtime on sweep traces.
+
+    The >= 50%-duplicate trace is where the cache earns its place (all-hit
+    micro-batches skip the preprocess stage outright); the 0%-duplicate
+    trace checks the cache-aware path costs nothing measurable when nothing
+    repeats.  Raises RuntimeError when the duplicate trace records no hits
+    or any response differs bitwise from its scene's uncached recomputation.
+
+    Each (trace, runtime) pair is measured best-of-N: a 48-request open loop
+    on a shared host has large run-to-run noise (one descheduled batch moves
+    throughput ~20%), and the best rep is the closest observation of what
+    each configuration can actually sustain.  Correctness (bitwise parity,
+    hits recorded) is asserted on EVERY rep, not just the reported one.
+    """
+    import jax
+
+    from repro.configs.base import get_config
+    from repro.core.accelerator import get_accelerator
+    from repro.serve import RuntimeConfig, ServingRuntime
+
+    cfg = get_config("pointnet2-cls", smoke=True)
+    width = 3 + cfg.in_features
+    n_points = cfg.n_points
+    accel = get_accelerator(cfg)
+    params = accel.init(jax.random.PRNGKey(seed))
+
+    n_requests = 64 if smoke else 120
+    dup_fracs = (0.6, 0.0) if smoke else (0.75, 0.5, 0.0)
+    max_batch = 4
+
+    # calibrate the arrival rate to THIS host's uncached capacity: per-request
+    # service time at B=max_batch through the fused artifact (min of 5 — the
+    # floor is far more stable run-to-run than a small-sample mean, and the
+    # rate must not swing with scheduler noise)
+    warm = np.zeros((max_batch, n_points, width), np.float32)
+    jax.block_until_ready(accel.infer(params, warm))
+    times = []
+    for _ in range(5):
+        t = time.perf_counter()
+        jax.block_until_ready(accel.infer(params, warm))
+        times.append(time.perf_counter() - t)
+    s_req = min(times) / max_batch
+    rate = 1.5 / s_req  # above uncached capacity: backlog unless work shrinks
+
+    n_reps = 5
+    rows = []
+    for dup in dup_fracs:
+        scenes, order = _sweep_trace(n_requests, dup, n_points, width, seed)
+        trace = [scenes[s] for s in order]
+        # rep k of BOTH configurations replays the same arrival schedule, so
+        # each rep is a paired comparison under identical offered load
+        arrivals_by_rep = [
+            np.cumsum(
+                np.random.default_rng(seed + int(dup * 100) + 7919 * r)
+                .exponential(1.0 / rate, size=n_requests)
+            )
+            for r in range(n_reps)
+        ]
+
+        # uncached direct reference, one per scene (bitwise target for BOTH
+        # paths: scenes are lattice-snapped so hits serve the same bytes)
+        refs = []
+        for scene in scenes:
+            batch = np.zeros((max_batch, n_points, width), np.float32)
+            batch[0] = scene
+            refs.append(np.asarray(accel.infer(params, batch))[0])
+
+        # reps INTERLEAVE the two configurations (uncached then cached within
+        # each rep) so host drift — turbo decay, noisy neighbors — lands on
+        # both sides of every pair instead of on whichever ran second
+        best = {}  # tag -> (thr, p95, rej, snap, stats) of the best-thr rep
+        best_p95 = {}
+        for arrivals in arrivals_by_rep:
+            for tag, cache_bytes in (("uncached", 0), ("cached", 64 * 2**20)):
+                rt = ServingRuntime(cfg, params, RuntimeConfig(
+                    max_batch=max_batch,
+                    max_wait_s=min(0.02, 4 * s_req * max_batch),
+                    max_queue=max(64, n_requests),
+                    buckets=(n_points,),
+                    cache_max_bytes=cache_bytes,
+                ))
+                rt.warmup()
+                submit = _IndexedSubmit(rt)
+                with rt:
+                    lat, rej, wall = _open_loop(submit, trace, arrivals)
+                snap = rt.metrics.snapshot()
+                stats = rt.cache_stats()
+
+                mismatches = 0
+                for i, fut in submit.futs:
+                    if fut.exception() is not None:
+                        continue
+                    if not np.array_equal(fut.result(), refs[order[i]]):
+                        mismatches += 1
+                if mismatches:
+                    raise RuntimeError(
+                        f"serve_cache d{dup:g} {tag}: {mismatches} responses "
+                        "differ bitwise from uncached recomputation"
+                    )
+                if tag == "cached" and dup > 0 and (stats is None or stats.hits == 0):
+                    raise RuntimeError(
+                        f"serve_cache d{dup:g}: duplicate trace recorded no "
+                        f"cache hits ({stats})"
+                    )
+
+                thr = len(lat) / wall if wall > 0 else 0.0
+                p95 = float(np.percentile(lat, 95)) if lat else float("nan")
+                best_p95[tag] = min(best_p95.get(tag, float("inf")), p95)
+                if tag not in best or thr > best[tag][0]:
+                    best[tag] = (thr, p95, rej, snap, stats)
+
+        results = {}
+        for tag in ("uncached", "cached"):
+            thr, _, rej, snap, stats = best[tag]
+            p95 = best_p95[tag]
+            results[tag] = (thr, p95)
+
+            extra = ""
+            if tag == "cached":
+                extra = (
+                    f" hit={snap.cache_hit_rate:.2f} skip={snap.preprocess_skipped}"
+                    f" saved={snap.cache_saved_s * 1e3:.0f}ms"
+                    f" resident={stats.bytes // 1024}KiB"
+                )
+            rows.append({
+                "name": f"serve_cache/{tag}_d{int(dup * 100)}",
+                "us": p95 * 1e6,
+                "note": (
+                    f"{thr:.1f} req/s best-of-{n_reps} (rate {rate:.1f}/s;"
+                    f" p95 {p95 * 1e3:.1f}ms; rej {rej}){extra}"
+                ),
+            })
+
+        (thr_u, p95_u), (thr_c, p95_c) = results["uncached"], results["cached"]
+        rows.append({
+            "name": f"serve_cache/speedup_d{int(dup * 100)}",
+            "us": float("nan"),
+            "note": (
+                f"cached/uncached throughput {thr_c / thr_u:.2f}x, "
+                f"p95 {p95_u / p95_c:.2f}x lower" if thr_u and p95_c else "n/a"
+            ),
         })
     return rows

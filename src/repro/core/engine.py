@@ -29,10 +29,12 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import io
 from typing import Literal
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import partition as part_mod
 from repro.core import preprocess as pp_mod
@@ -258,3 +260,105 @@ def get_engine(config: EngineConfig) -> PreprocessEngine:
     models/ and serve/ build engines per SA stage; the cache makes that free.
     """
     return PreprocessEngine(config)
+
+
+# -- result trees: size accounting, per-row access, serialization -------------
+#
+# A "result tree" is any pytree of arrays built from PreprocessResults — one
+# batched result, or the tuple-per-SA-stage the accelerator's
+# preprocess_stage emits.  The cross-request preprocess cache
+# (serve/preprocess_cache.py) stores these per request row and re-assembles
+# them per micro-batch, so the row/stack/byte helpers live HERE, next to the
+# engine that defines the layout, and stay pure tree manipulation.
+
+
+def result_nbytes(res) -> int:
+    """Total bytes of every array leaf in a result tree.
+
+    Works on host (numpy) and device (jax.Array) leaves alike — both expose
+    `.nbytes` — so the cache's byte budget accounts exactly what it retains.
+    """
+    return int(sum(x.nbytes for x in jax.tree_util.tree_leaves(res)))
+
+
+def result_to_host(res):
+    """Materialize every leaf of a result tree as a WRITABLE host numpy array.
+
+    Blocks on (and transfers) device leaves.  Writability matters: on the
+    CPU backend `np.asarray(jax_array)` can be a read-only view of the
+    device buffer, which would make the cache-hit splice
+    (`result_set_row`) raise — so read-only leaves are copied.
+    """
+
+    def one(x):
+        arr = np.asarray(x)
+        return arr if arr.flags.writeable else arr.copy()
+
+    return jax.tree.map(one, res)
+
+
+def result_row(res, i: int):
+    """Slice row `i` off every leaf's leading (batch) dim of a result tree.
+
+    The per-request payload the preprocess cache stores: one cloud's
+    centroids/neighborhoods out of a batched PreprocessResult.
+    """
+    return jax.tree.map(lambda x: x[i], res)
+
+
+def result_stack(rows, total: int | None = None):
+    """Stack per-row result trees back into one batched tree.
+
+    `rows` are `result_row`-shaped trees (all the same structure);
+    `total` > len(rows) appends zero filler rows so the stacked batch hits a
+    static batch dim — filler rows mirror assemble_batch's zero batch rows,
+    whose outputs the scatter step drops.
+    """
+    rows = list(rows)
+    if not rows:
+        raise ValueError("need at least one row to stack")
+    if total is not None and total > len(rows):
+        filler = jax.tree.map(np.zeros_like, rows[0])
+        rows.extend([filler] * (total - len(rows)))
+    return jax.tree.map(lambda *xs: np.stack(xs), *rows)
+
+
+def result_set_row(res, i: int, row) -> None:
+    """Write a per-row tree into row `i` of a batched HOST result tree.
+
+    In-place: `res` leaves must be writable numpy arrays (use
+    `result_to_host` first).  This is the cache-hit splice — a hit row's
+    cached neighborhoods replace whatever the batched preprocess computed
+    for that row before the feature stage consumes the tree.
+    """
+    dst_leaves, treedef = jax.tree_util.tree_flatten(res)
+    src_leaves = treedef.flatten_up_to(row)
+    for dst, src in zip(dst_leaves, src_leaves):
+        dst[i] = src
+
+
+def serialize_result(res) -> bytes:
+    """Pack a result tree's leaves into one portable npz byte blob.
+
+    Leaves are stored in tree-flatten order; the tree STRUCTURE is not
+    encoded — pass a structurally identical template to
+    `deserialize_result` to rebuild (every cache entry of one runtime
+    shares a single structure, so shipping it per blob would be waste).
+    """
+    leaves = [np.asarray(x) for x in jax.tree_util.tree_leaves(res)]
+    buf = io.BytesIO()
+    np.savez(buf, *leaves)
+    return buf.getvalue()
+
+
+def deserialize_result(blob: bytes, like):
+    """Rebuild a result tree from `serialize_result` bytes.
+
+    `like` supplies the tree structure (any tree with the same topology,
+    e.g. a live entry's payload); leaf arrays come from the blob, dtype and
+    shape preserved bitwise.
+    """
+    with np.load(io.BytesIO(blob)) as data:
+        leaves = [data[k] for k in data.files]
+    treedef = jax.tree_util.tree_structure(like)
+    return jax.tree_util.tree_unflatten(treedef, leaves)

@@ -19,6 +19,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import registry
+
 _INF = 3.0e38  # python float: jnp scalars would be captured consts in the kernel
 
 
@@ -51,20 +53,32 @@ def knn3_pallas(
     bq: int = 256,
     interpret: bool = False,
 ):
-    """queries: (Q, 3), points: (3, P) -> (idx (Q,k) int32, dist (Q,k) f32)."""
+    """queries: (Q, 3), points: (3, P) -> (idx (Q,k) int32, dist (Q,k) f32).
+
+    Q needs no alignment: the query block is clamped to Q, sublane-aligned
+    (multiple of 8 — queries live on sublanes), and the queries are padded
+    internally up to a whole number of blocks with first-row copies, the
+    same way fps_tiles pads lanes.  Padded rows compute real neighbours of
+    the duplicated query and are sliced off before returning.
+    """
     qn, three = queries.shape
     assert three == 3 and points.shape[0] == 3
+    if qn < 1:
+        raise ValueError(f"need at least one query, got Q={qn}")
     p = points.shape[1]
     if p % 128 != 0:
         raise ValueError(f"P={p} must be a multiple of 128")
+    # clamp then sublane-align: bq > qn after clamping is fine (the whole
+    # query set is one block), the padding below makes Q divide
     bq = min(bq, qn)
-    if qn % bq != 0:
-        raise ValueError(f"Q={qn} not divisible by block {bq}")
+    bq += (-bq) % registry.SUBLANE
+    queries, _ = registry.pad_to_multiple(queries, axis=0, multiple=bq)
+    total = queries.shape[0]
 
     kernel = functools.partial(_knn3_kernel, metric=metric, k=k)
-    return pl.pallas_call(
+    idx, dist = pl.pallas_call(
         kernel,
-        grid=(qn // bq,),
+        grid=(total // bq,),
         in_specs=[
             pl.BlockSpec((bq, 3), lambda i: (i, 0)),
             pl.BlockSpec((3, p), lambda i: (0, 0)),
@@ -74,9 +88,10 @@ def knn3_pallas(
             pl.BlockSpec((bq, k), lambda i: (i, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((qn, k), jnp.int32),
-            jax.ShapeDtypeStruct((qn, k), jnp.float32),
+            jax.ShapeDtypeStruct((total, k), jnp.int32),
+            jax.ShapeDtypeStruct((total, k), jnp.float32),
         ],
         interpret=interpret,
         name="pc2im_knn3",
     )(queries, points)
+    return idx[:qn], dist[:qn]

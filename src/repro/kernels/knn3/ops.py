@@ -27,17 +27,11 @@ def knn3(
     if resolved == "xla":
         return impl(queries, pts_t, k=k, metric=metric)
 
-    q = queries.shape[0]
     # huge-but-finite offset padding: +inf coordinates would NaN the distance
-    # math, the FAR_OFFSET filler just never wins
+    # math, the FAR_OFFSET filler just never wins.  Query alignment is the
+    # kernel's own job: knn3_pallas sublane-aligns its block and pads Q
+    # internally, so any Q >= 1 goes straight through
     pts_t, _ = registry.pad_to_multiple(
         pts_t, axis=1, multiple=registry.LANE, offset=registry.FAR_OFFSET
     )
-    bq = 256
-    if q < bq:
-        bq = q + ((-q) % registry.SUBLANE if q % registry.SUBLANE else 0) or q
-    queries, _ = registry.pad_to_multiple(queries, axis=0, multiple=bq)
-    idx, dist = impl(
-        queries.astype(jnp.float32), pts_t.astype(jnp.float32), k=k, metric=metric, bq=bq
-    )
-    return idx[:q], dist[:q]
+    return impl(queries.astype(jnp.float32), pts_t.astype(jnp.float32), k=k, metric=metric)

@@ -5,8 +5,11 @@ Layered back to front: `queue` (bounded admission, deadlines, futures),
 ExecutionPolicy — pipeline schedule included), `dispatch` (per-device
 replica pool with heartbeat eviction and the two-stage pipelined path),
 `metrics`, and `runtime` (the `ServingRuntime` facade most callers want).
-`pointcloud` / `step` are the synchronous per-batch serve functions.  See
-docs/ARCHITECTURE.md for the dataflow diagram.
+`hashing` / `preprocess_cache` implement the cross-request preprocess
+cache: content-addressed duplicate clouds skip the preprocess stage and
+enter the feature stage directly.  `pointcloud` / `step` are the
+synchronous per-batch serve functions.  See docs/ARCHITECTURE.md for the
+dataflow diagram.
 """
 
 from repro.serve.dispatch import NoReplicaAvailable, Replica, ReplicaPool  # noqa: F401
@@ -17,6 +20,13 @@ from repro.serve.pointcloud import (  # noqa: F401
     make_pointcloud_serve_fns,
     pad_cloud,
     subsample_indices,
+)
+from repro.serve.hashing import DEFAULT_QUANT_STEP, content_key, quantize_cloud  # noqa: F401
+from repro.serve.preprocess_cache import (  # noqa: F401
+    CacheConfig,
+    CacheEntry,
+    PreprocessCache,
+    PreprocessCacheStats,
 )
 from repro.serve.queue import (  # noqa: F401
     AdmissionError,

@@ -31,6 +31,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.accelerator import get_accelerator
+from repro.core.engine import (
+    result_row,
+    result_set_row,
+    result_stack,
+    result_to_host,
+)
 from repro.runtime.fault_tolerance import HeartbeatMonitor, StragglerMonitor
 from repro.serve.metrics import BatchRecord, ServeMetrics
 from repro.serve.queue import try_set_exception, try_set_result
@@ -164,6 +170,13 @@ class ReplicaPool:
                     on_straggler=self.metrics.record_straggler)
             for i in range(n)
         ]
+        # background cache fill for all-miss batches (thread spawns on first
+        # submit, so uncached pools pay nothing); single-threaded, so inserts
+        # land in batch-completion order and a later duplicate's
+        # execution-time lookup observes them deterministically
+        self._insert_executor = ThreadPoolExecutor(
+            max_workers=1, thread_name_prefix="pc2im-cache-insert"
+        )
         self._pumps: list[threading.Thread] = []
         if heartbeat_timeout_s is not None:
             for rep in self.replicas:
@@ -297,17 +310,181 @@ class ReplicaPool:
             accel = get_accelerator(self.model_cfg, mb.policy)
             rep.straggler.step_start()
             batch = jax.device_put(jnp.asarray(mb.batch), rep.device)
-            logits = np.asarray(jax.block_until_ready(accel.infer(rep.params, batch)))
+            if mb.cache is not None:
+                logits, skipped = self._run_cached(accel, rep, mb, batch)
+            else:
+                logits = np.asarray(
+                    jax.block_until_ready(accel.infer(rep.params, batch))
+                )
+                skipped = False
             dt = rep.straggler.step_end(rep.n_batches)
             if rep.heartbeat is not None:
                 rep.heartbeat.beat()
-            self._record_success(rep, entry, logits, dt)
+            self._record_success(rep, entry, logits, dt, preprocess_skipped=skipped)
         except Exception as e:  # noqa: BLE001 — any device/kernel failure
             with self._lock:
                 rep.inflight.pop(entry.seq, None)
             self._retry(entry, rep.id, e)
 
-    def _record_success(self, rep: Replica, entry: _Entry, logits, dt: float):
+    # -- preprocess-cache execution -------------------------------------------
+
+    def _resolve_entries(self, mb) -> tuple:
+        """Authoritative, counted cache lookups for one batch at execution time.
+
+        The scheduler peeked at assembly time (to substitute canonical rows);
+        by the time the batch EXECUTES, every earlier batch on this replica
+        has finished inserting, so a request that peek-missed while its
+        duplicate's batch was still in flight can upgrade to a hit here —
+        under a backlogged cyclic trace this is where most hits come from.
+        A late hit is accepted only when the assembled batch row is
+        bitwise-equal to the entry's canonical row (always true for exact
+        duplicates; a sub-step-noise near-duplicate whose row was NOT
+        canonicalized at assembly keeps the miss path, preserving parity).
+        Returns one CacheEntry-or-None per request; exactly one counted
+        lookup per addressable request.
+        """
+        entries = []
+        hits = misses = 0
+        for i, req in enumerate(mb.requests):
+            ent = None
+            if req.cache_key is not None:
+                ent = mb.cache.lookup(req.cache_key)
+                if ent is not None and not np.array_equal(mb.batch[i], ent.row):
+                    ent = None
+                if ent is not None:
+                    hits += 1
+                else:
+                    misses += 1
+            entries.append(ent)
+        # one metrics-lock round trip per outcome, not per request — the
+        # metrics lock is shared with the scheduler's hot path
+        if hits:
+            self.metrics.record_cache_lookup(True, hits)
+        if misses:
+            self.metrics.record_cache_lookup(False, misses)
+        return tuple(entries)
+
+    def _run_cached(self, accel, rep, mb, batch):
+        """Cache-aware execution of one batch; returns (logits, skipped).
+
+        All-hit: the preprocess stage is skipped outright — the per-row
+        cached neighborhoods are restacked (zero filler rows matching the
+        zero filler batch rows) and fed straight to `feature_from_cached`.
+        All-miss: `infer_with_preprocess` — ONE dispatch at fused-path cost
+        whose second output feeds the background cache fill, so the
+        0%-duplicate workload pays nothing over the uncached path.
+        Mixed: the batch runs `preprocess_stage` (the staged composition is
+        bitwise-equal to the fused `infer`, pinned by
+        tests/test_pipelined_accelerator.py, so miss parity is preserved),
+        hit rows are spliced in on the host, and miss rows populate the
+        cache before the feature stage runs.
+        """
+        if mb.n_real == 0:
+            # warmup batch: trace EVERY artifact a cached batch can touch so
+            # no variant compiles mid-traffic (a multi-hundred-ms stall)
+            fused, _pre = accel.infer_with_preprocess(rep.params, batch)
+            pre = accel.preprocess_stage(batch)
+            logits = np.asarray(
+                jax.block_until_ready(accel.feature_stage(rep.params, batch, pre))
+            )
+            jax.block_until_ready(fused)
+            return logits, False
+        entries = self._resolve_entries(mb)
+        n_hits = sum(1 for e in entries if e is not None)
+        if n_hits == mb.n_real:
+            # device_put: the feature artifact must only ever see COMMITTED
+            # device trees — a host-numpy variant would compile a second
+            # executable for the same shapes (a one-off multi-hundred-ms
+            # stall mid-traffic)
+            pre = jax.device_put(
+                result_stack([e.pre for e in entries], total=mb.batch.shape[0]),
+                rep.device,
+            )
+            logits = np.asarray(
+                jax.block_until_ready(
+                    accel.feature_from_cached(rep.params, batch, pre)
+                )
+            )
+            return logits, True
+        if n_hits == 0:
+            logits_dev, pre = accel.infer_with_preprocess(rep.params, batch)
+            logits = np.asarray(jax.block_until_ready(logits_dev))
+            self._insert_executor.submit(self._insert_misses, mb, pre, entries)
+            return logits, False
+        pre = jax.device_put(
+            self._cached_splice(mb, accel.preprocess_stage(batch), entries),
+            rep.device,
+        )
+        logits = np.asarray(
+            jax.block_until_ready(accel.feature_stage(rep.params, batch, pre))
+        )
+        return logits, False
+
+    def _splice_or_insert(self, rep, mb, pre, entries):
+        """Route one non-all-hit pipelined cache batch's preprocess output.
+
+        Mixed (some hits): the host splice path — hit rows must replace the
+        freshly computed ones before the feature stage consumes them, and
+        the spliced tree goes back to the device committed (same executable
+        as the miss path, see `_run_cached`).  All-miss: the device tree is
+        returned UNTOUCHED (the feature stage runs exactly the uncached
+        staged composition, no host round trip on the critical path) and
+        miss insertion happens on the pool's background insert thread —
+        cache fill is bookkeeping, not part of the response, so it must not
+        tax the 0%-duplicate workload.
+        """
+        if any(e is not None for e in entries):
+            return jax.device_put(
+                self._cached_splice(mb, pre, entries), rep.device
+            )
+        self._insert_executor.submit(self._insert_misses, mb, pre, entries)
+        return pre
+
+    def _cached_splice(self, mb, pre, entries):
+        """Host splice of hits + cache insertion of misses on one batch.
+
+        `pre` is the batched `preprocess_stage` output; `entries` the
+        execution-time resolved CacheEntry-or-None per request.  Returns the
+        host result tree the feature stage should consume: miss rows exactly
+        as the stage computed them (the round trip through the host is
+        bitwise-lossless), hit rows replaced by their cached payloads
+        (whose canonical clouds already sit in the batch rows).  Miss rows
+        with a content address populate the cache before the feature stage
+        runs, so a concurrent duplicate can hit as early as possible.
+        """
+        pre = result_to_host(pre)
+        for i, ent in enumerate(entries):
+            if ent is not None:
+                result_set_row(pre, i, ent.pre)
+        self._insert_misses(mb, pre, entries)
+        return pre
+
+    def _insert_misses(self, mb, pre, entries):
+        """Populate the cache with one batch's miss rows (best effort).
+
+        `pre` may be a device tree (async all-miss path) or the already
+        host-resident splice output; `result_to_host` is a no-op copy for
+        the latter.  Failures are swallowed: the response already shipped
+        (or ships independently), and a lost fill only costs a future hit.
+        """
+        try:
+            pre = result_to_host(pre)
+            for i, req in enumerate(mb.requests):
+                hit = i < len(entries) and entries[i] is not None
+                if not hit and req.cache_key is not None:
+                    mb.cache.insert(req.cache_key, mb.batch[i], result_row(pre, i))
+        except Exception:  # noqa: BLE001 — cache fill must never fail a batch
+            pass
+
+    def _record_success(
+        self,
+        rep: Replica,
+        entry: _Entry,
+        logits,
+        dt: float,
+        *,
+        preprocess_skipped: bool = False,
+    ):
         """Success bookkeeping shared by the sequential and pipelined paths.
 
         exactly-one-winner: an evicted-but-still-running replica can race
@@ -328,6 +505,7 @@ class ReplicaPool:
                 batch_size=mb.batch.shape[0],
                 replica_id=rep.id,
                 duration_s=dt,
+                preprocess_skipped=preprocess_skipped,
             ))
 
     def _execute_pipelined(self, rep: Replica, entry: _Entry):
@@ -351,10 +529,34 @@ class ReplicaPool:
             rep.acquire_handoff()  # double-buffer bound (released by feature stage)
             try:
                 batch = jax.device_put(jnp.asarray(mb.batch), rep.device)
-                pre = accel.preprocess_stage(batch)  # async — hand off, don't block
+                entries: tuple = ()
+                if mb.cache is not None:
+                    # resolved on the worker thread: the pipelined worker runs
+                    # one batch ahead of the feature thread, so late hits from
+                    # the immediately preceding batch's insert may still miss
+                    # — correctness is unaffected, only the skip opportunity
+                    entries = self._resolve_entries(mb)
+                if mb.n_real > 0 and entries and all(e is not None for e in entries):
+                    # cache skip composes with the pipeline: the worker hands
+                    # the restacked payload straight to the feature thread —
+                    # no preprocess dispatch at all for this batch
+                    # (device_put: committed, same executable as miss batches)
+                    pre = jax.device_put(
+                        result_stack(
+                            [e.pre for e in entries], total=mb.batch.shape[0]
+                        ),
+                        rep.device,
+                    )
+                    skipped = True
+                else:
+                    pre = accel.preprocess_stage(batch)  # async — hand off, don't block
+                    skipped = False
                 if rep.heartbeat is not None:
                     rep.heartbeat.beat()
-                rep.submit_feature(self._finish_pipelined, rep, entry, accel, batch, pre)
+                rep.submit_feature(
+                    self._finish_pipelined, rep, entry, accel, batch, pre, skipped,
+                    entries,
+                )
             except Exception:
                 rep.release_handoff()  # the feature stage will never run for us
                 raise
@@ -363,7 +565,16 @@ class ReplicaPool:
                 rep.inflight.pop(entry.seq, None)
             self._retry(entry, rep.id, e)
 
-    def _finish_pipelined(self, rep: Replica, entry: _Entry, accel, batch, pre):
+    def _finish_pipelined(
+        self,
+        rep: Replica,
+        entry: _Entry,
+        accel,
+        batch,
+        pre,
+        skipped: bool = False,
+        entries: tuple = (),
+    ):
         try:
             if entry.future.done():  # re-dispatched after eviction while queued
                 with self._lock:
@@ -375,13 +586,26 @@ class ReplicaPool:
             # through the data dependency)
             t0 = time.monotonic()
             try:
+                mb = entry.mb
+                if skipped:
+                    feature = accel.feature_from_cached
+                else:
+                    if mb.cache is not None:
+                        # mixed cache batch: host splice on the feature
+                        # thread (blocks on the preprocess result through
+                        # the transfer, same data dependency); all-miss
+                        # batches keep the device tree + async insert
+                        pre = self._splice_or_insert(rep, mb, pre, entries)
+                    feature = accel.feature_stage
                 logits = np.asarray(
-                    jax.block_until_ready(accel.feature_stage(rep.params, batch, pre))
+                    jax.block_until_ready(feature(rep.params, batch, pre))
                 )
                 dt = time.monotonic() - t0
                 if rep.feature_heartbeat is not None:
                     rep.feature_heartbeat.beat()
-                self._record_success(rep, entry, logits, dt)
+                self._record_success(
+                    rep, entry, logits, dt, preprocess_skipped=skipped
+                )
             except Exception as e:  # noqa: BLE001 — any device/kernel failure
                 with self._lock:
                     rep.inflight.pop(entry.seq, None)
@@ -411,6 +635,7 @@ class ReplicaPool:
             f.result(timeout=300)
 
     def shutdown(self):
-        """Stop every replica (abandoning in-flight batches)."""
+        """Stop every replica (abandoning in-flight batches and cache fills)."""
         for rep in self.replicas:
             rep.shutdown()
+        self._insert_executor.shutdown(wait=False)

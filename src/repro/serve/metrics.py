@@ -30,6 +30,7 @@ class BatchRecord:
     batch_size: int  # static batch dim
     replica_id: int
     duration_s: float
+    preprocess_skipped: bool = False  # all-hit batch: entered the feature stage directly
 
 
 @dataclasses.dataclass(frozen=True)
@@ -58,15 +59,32 @@ class MetricsSnapshot:
     mean_occupancy: float  # mean(n_real / batch_size) over executed batches
     queue_depth_mean: float
     queue_depth_max: int
+    cache_hits: int = 0  # preprocess-cache lookups that hit
+    cache_misses: int = 0  # preprocess-cache lookups that missed
+    preprocess_skipped: int = 0  # all-hit batches that skipped the preprocess stage
+    cache_saved_s: float = 0.0  # estimated batch latency the skips avoided
+
+    @property
+    def cache_hit_rate(self) -> float:
+        """hits / lookups of the preprocess cache, 0.0 with no lookups."""
+        total = self.cache_hits + self.cache_misses
+        return self.cache_hits / total if total else 0.0
 
     def format_row(self) -> str:
         """One-line human summary (the serve benchmarks print this)."""
-        return (
+        row = (
             f"completed={self.completed} rejected={self.rejected} "
             f"expired={self.expired} thr={self.throughput_rps:.1f}/s "
             f"p50={self.latency_p50_s * 1e3:.1f}ms p95={self.latency_p95_s * 1e3:.1f}ms "
             f"p99={self.latency_p99_s * 1e3:.1f}ms occ={self.mean_occupancy:.2f}"
         )
+        if self.cache_hits or self.cache_misses:
+            row += (
+                f" hit={self.cache_hit_rate:.2f}"
+                f" skip={self.preprocess_skipped}"
+                f" saved={self.cache_saved_s * 1e3:.1f}ms"
+            )
+        return row
 
 
 class ServeMetrics:
@@ -82,6 +100,8 @@ class ServeMetrics:
         self.retries = 0
         self.evictions = 0
         self.straggler_events = 0
+        self.cache_hits = 0
+        self.cache_misses = 0
         self._latencies: list[float] = []
         self._depths: list[int] = []
         self._batches: list[BatchRecord] = []
@@ -126,6 +146,14 @@ class ServeMetrics:
         """Count one straggler event (slow-but-alive replica batch)."""
         with self._lock:
             self.straggler_events += 1
+
+    def record_cache_lookup(self, hit: bool, n: int = 1):
+        """Count n preprocess-cache probes resolved at batch execution."""
+        with self._lock:
+            if hit:
+                self.cache_hits += n
+            else:
+                self.cache_misses += n
 
     def record_completed(self, latency_s: float):
         """Record one completed request and its end-to-end latency."""
@@ -182,6 +210,16 @@ class ServeMetrics:
                 if real
                 else 0.0
             )
+            # saved-latency estimate: what an all-hit batch costs vs what the
+            # same traffic costs through the full preprocess+feature path.
+            # An estimate, not a measurement — the avoided work never ran
+            skipped = [b.duration_s for b in real if b.preprocess_skipped]
+            full = [b.duration_s for b in real if not b.preprocess_skipped]
+            saved = (
+                len(skipped) * max(0.0, float(np.mean(full)) - float(np.mean(skipped)))
+                if skipped and full
+                else 0.0
+            )
             depths = np.asarray(self._depths, np.int64)
             return MetricsSnapshot(
                 submitted=self.submitted,
@@ -200,4 +238,8 @@ class ServeMetrics:
                 mean_occupancy=occ,
                 queue_depth_mean=float(depths.mean()) if depths.size else 0.0,
                 queue_depth_max=int(depths.max()) if depths.size else 0,
+                cache_hits=self.cache_hits,
+                cache_misses=self.cache_misses,
+                preprocess_skipped=len(skipped),
+                cache_saved_s=saved,
             )

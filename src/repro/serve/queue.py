@@ -94,6 +94,13 @@ class Request:
     deadline_t: float | None  # absolute time.monotonic() instant, None = no deadline
     submit_t: float
     future: Future
+    # preprocess-cache probe: the bucket-fitted batch row and its content
+    # address.  Computed lazily by the scheduler at assembly when caching is
+    # enabled (admission stays O(1) on the client thread); tests may fill
+    # them in ahead of time.  Stay None when caching is off — assembly then
+    # falls back to pad_cloud and never touches the cache.
+    fitted: np.ndarray | None = None  # (bucket, 3 + F) pad_cloud row
+    cache_key: tuple | None = None  # PreprocessCache.key_for address
 
     @property
     def key(self) -> tuple:
@@ -126,11 +133,15 @@ class AdmissionQueue:
         bucket: int,
         policy: ExecutionPolicy,
         timeout_s: float | None = None,
+        fitted: np.ndarray | None = None,
+        cache_key: tuple | None = None,
     ) -> Future:
         """Admit one cloud; returns its future or raises AdmissionError.
 
         Backpressure is synchronous: a full queue rejects HERE (QueueFull),
         never silently drops, so open-loop clients observe the shed load.
+        `fitted`/`cache_key` carry the preprocess-cache probe when the
+        runtime computed one (see Request).
         """
         now = time.monotonic()
         req = Request(
@@ -142,6 +153,8 @@ class AdmissionQueue:
             deadline_t=(now + timeout_s) if timeout_s is not None else None,
             submit_t=now,
             future=Future(),
+            fitted=fitted,
+            cache_key=cache_key,
         )
         with self._cond:
             if self._closed:

@@ -16,6 +16,12 @@ MLPs run).  The scheduler guarantees a micro-batch never mixes policies or
 shape buckets, so every batch resolves to exactly one cached
 `PC2IMAccelerator` artifact and one jit trace, and pipelined vs sequential
 batch groups never share an artifact.
+
+With `RuntimeConfig(cache_max_bytes=...)` set, a cross-request preprocess
+cache sits in front of the scheduler: content-addressed duplicate clouds
+skip the FPS/kNN/partition stage on repeat requests and enter the feature
+stage directly (serve/preprocess_cache.py; `rt.cache_stats()` reports
+residency, `rt.metrics.snapshot()` the hit rate and saved latency).
 """
 
 from __future__ import annotations
@@ -28,7 +34,9 @@ import numpy as np
 from repro.core.accelerator import get_accelerator
 from repro.core.policy import ExecutionPolicy, resolve_policy
 from repro.serve.dispatch import ReplicaPool
+from repro.serve.hashing import DEFAULT_QUANT_STEP
 from repro.serve.metrics import ServeMetrics
+from repro.serve.preprocess_cache import CacheConfig, PreprocessCache
 from repro.serve.queue import AdmissionError, AdmissionQueue
 from repro.serve.scheduler import BatchScheduler, MicroBatch, SchedulerConfig, bucket_for
 
@@ -42,6 +50,9 @@ class RuntimeConfig:
     of extra jit traces.  heartbeat_timeout_s=None disables liveness
     eviction (single-process default); when set it must exceed the
     worst-case batch latency or healthy-but-slow replicas get evicted.
+    cache_max_bytes > 0 enables the cross-request preprocess cache
+    (serve/preprocess_cache.py): duplicate clouds — within cache_quant_step
+    float noise — skip the preprocess stage on repeat requests.
     """
 
     max_batch: int = 8
@@ -52,6 +63,8 @@ class RuntimeConfig:
     heartbeat_timeout_s: float | None = None
     max_retries: int = 2
     default_timeout_s: float | None = None  # per-request deadline default
+    cache_max_bytes: int = 0  # 0 disables the preprocess cache
+    cache_quant_step: float = DEFAULT_QUANT_STEP  # content-hash lattice pitch
 
 
 class ServingRuntime:
@@ -79,6 +92,16 @@ class ServingRuntime:
         self.default_policy = resolve_policy(model_cfg, policy)
         self.buckets = tuple(sorted(self.config.buckets or (model_cfg.n_points,)))
         self.metrics = ServeMetrics()
+        self.cache = (
+            PreprocessCache(
+                CacheConfig(
+                    max_bytes=self.config.cache_max_bytes,
+                    quant_step=self.config.cache_quant_step,
+                )
+            )
+            if self.config.cache_max_bytes > 0
+            else None
+        )
         self.queue = AdmissionQueue(self.config.max_queue)
         self.pool = ReplicaPool(
             model_cfg,
@@ -99,6 +122,7 @@ class ServingRuntime:
                 max_batch=self.config.max_batch, max_wait_s=self.config.max_wait_s
             ),
             metrics=self.metrics,
+            cache=self.cache,
         )
         self._started = False
         self._stopped = False
@@ -147,7 +171,10 @@ class ServingRuntime:
         The first real request then never pays compile latency (and load
         benchmarks measure serving, not tracing).  A policy with
         pipeline="pipelined" warms both staged sub-artifacts through the
-        replica's two-stage path.
+        replica's two-stage path; with the preprocess cache enabled the
+        warmup batch carries the cache too, so the staged
+        preprocess/feature sub-artifacts every cache-aware batch uses are
+        traced up front as well.
         """
         width = 3 + self.model_cfg.in_features
         for pol in policies:
@@ -159,6 +186,7 @@ class ServingRuntime:
                     bucket=bucket,
                     policy=resolved,
                     batch=np.zeros((self.config.max_batch, bucket, width), np.float32),
+                    cache=self.cache,
                 )
                 self.pool.warmup(mb)
         return self
@@ -195,10 +223,15 @@ class ServingRuntime:
         )
         if timeout_s is None:
             timeout_s = self.config.default_timeout_s
+        bucket = bucket_for(cloud.shape[0], self.buckets)
+        # cache probe material (bucket fit + content hash) is deliberately
+        # NOT computed here: admission must stay O(1) per request on the
+        # client thread, so the scheduler computes it at assembly, where it
+        # overlaps batch execution (scheduler._dispatch)
         try:
             fut = self.queue.submit(
                 cloud,
-                bucket=bucket_for(cloud.shape[0], self.buckets),
+                bucket=bucket,
                 policy=resolved,
                 timeout_s=timeout_s,
             )
@@ -211,6 +244,15 @@ class ServingRuntime:
     def infer(self, cloud: np.ndarray, **kwargs) -> np.ndarray:
         """Blocking convenience wrapper around submit()."""
         return self.submit(cloud, **kwargs).result()
+
+    def cache_stats(self):
+        """PreprocessCacheStats of the runtime's cache, None when disabled.
+
+        Complements `metrics.snapshot()` (which carries hit/miss counters
+        and the saved-latency estimate) with residency: entries, resident
+        bytes, evictions, oversize refusals.
+        """
+        return self.cache.stats() if self.cache is not None else None
 
     def __repr__(self):
         return (

@@ -56,17 +56,44 @@ class SchedulerConfig:
 
 @dataclasses.dataclass(frozen=True, eq=False)  # identity hash: lives in sets
 class MicroBatch:
-    """One schedulable unit: same bucket, same policy, static shape."""
+    """One schedulable unit: same bucket, same policy, static shape.
+
+    When the runtime enables the preprocess cache, `cache` carries it and
+    `cache_entries` holds one CacheEntry-or-None per request as PEEKED at
+    assembly time (each hit's canonical row was substituted into `batch`,
+    so a hit row IS the cloud its cached neighborhoods were computed from).
+    The dispatch layer re-probes at execution time — an assembly-time miss
+    whose cloud was inserted by an earlier batch upgrades to a hit there —
+    then splices hits / inserts misses; a batch whose every request hit
+    skips the preprocess stage entirely.
+    """
 
     requests: tuple[Request, ...]
     bucket: int  # n_points of the batch
     policy: object  # resolved ExecutionPolicy
     batch: np.ndarray  # (max_batch, bucket, 3 + F) float32, filler rows zero
+    cache: object | None = None  # PreprocessCache, None = caching disabled
+    cache_entries: tuple = ()  # per-request CacheEntry | None (when cache is set)
 
     @property
     def n_real(self) -> int:
         """Real requests in the batch; rows beyond this are zero filler."""
         return len(self.requests)
+
+    @property
+    def n_hits(self) -> int:
+        """Requests whose preprocess result came from the cache."""
+        return sum(1 for e in self.cache_entries if e is not None)
+
+    @property
+    def all_hit(self) -> bool:
+        """True when EVERY real request hit — preprocess can be skipped."""
+        return (
+            self.cache is not None
+            and self.n_real > 0
+            and len(self.cache_entries) == self.n_real
+            and all(e is not None for e in self.cache_entries)
+        )
 
 
 def bucket_for(n: int, buckets: Sequence[int]) -> int:
@@ -82,17 +109,28 @@ def bucket_for(n: int, buckets: Sequence[int]) -> int:
 
 
 def assemble_batch(
-    requests: Sequence[Request], bucket: int, width: int, max_batch: int
+    requests: Sequence[Request],
+    bucket: int,
+    width: int,
+    max_batch: int,
+    rows: Sequence[np.ndarray | None] | None = None,
 ) -> np.ndarray:
     """Pure batch assembly onto the static (max_batch, bucket, width) shape.
 
     Each request's cloud is fitted to `bucket` rows via pad_cloud; filler
-    batch rows stay zero.  Shared with tests so scheduler batches are
+    batch rows stay zero.  `rows` optionally supplies pre-fitted
+    (bucket, width) rows per request — the runtime's admission-time fit,
+    or a cache hit's CANONICAL row (substituting it is what makes hit
+    responses bitwise-equal to recomputing the cached cloud); a None entry
+    falls back to pad_cloud.  Shared with tests so scheduler batches are
     bitwise-reproducible outside the runtime.
     """
     batch = np.zeros((max_batch, bucket, width), np.float32)
     for i, req in enumerate(requests):
-        batch[i] = pad_cloud(np.asarray(req.cloud, np.float32), bucket)[0]
+        row = rows[i] if rows is not None else None
+        if row is None:
+            row = pad_cloud(np.asarray(req.cloud, np.float32), bucket)[0]
+        batch[i] = row
     return batch
 
 
@@ -136,6 +174,7 @@ class BatchScheduler:
         buckets: Sequence[int],
         config: SchedulerConfig | None = None,
         metrics: ServeMetrics | None = None,
+        cache=None,
     ):
         self.queue = queue
         self.dispatch_fn = dispatch_fn
@@ -144,6 +183,7 @@ class BatchScheduler:
         self.buckets = tuple(sorted(buckets))
         self.config = config or SchedulerConfig()
         self.metrics = metrics or ServeMetrics()
+        self.cache = cache  # PreprocessCache | None — peeked at _dispatch
         self._pending: dict[tuple, list[Request]] = {}
         self._inflight: set = set()
         self._inflight_cond = threading.Condition()
@@ -251,13 +291,56 @@ class BatchScheduler:
             return
         bucket, policy = key
         try:
-            batch = assemble_batch(live, bucket, self.width, self.config.max_batch)
+            entries: tuple = ()
+            rows = None
+            if self.cache is not None:
+                # probe material is computed lazily HERE, on the scheduler
+                # thread: admission stays O(1) for clients, and the fit +
+                # hash overlap batch execution on the replica workers
+                # instead of delaying either (tests may pre-compute keys;
+                # those are kept as-is)
+                for req in live:
+                    if req.cache_key is None:
+                        req.fitted = pad_cloud(
+                            np.asarray(req.cloud, np.float32), bucket
+                        )[0]
+                        req.cache_key = self.cache.key_for(
+                            bucket, policy, req.fitted
+                        )
+                # side-effect-free peek: a hit's canonical row replaces the
+                # request's own fitted row in the batch, so the feature stage
+                # consumes exactly the cloud the cached neighborhoods were
+                # computed from.  The COUNTED lookup happens at execution
+                # time (dispatch.py), where inserts from every earlier batch
+                # on the replica are already visible — a peek-miss here can
+                # still become a hit there.
+                probe = [
+                    self.cache.peek(req.cache_key)
+                    if req.cache_key is not None
+                    else None
+                    for req in live
+                ]
+                entries = tuple(probe)
+                rows = [
+                    ent.row if ent is not None else req.fitted
+                    for req, ent in zip(live, entries)
+                ]
+            batch = assemble_batch(
+                live, bucket, self.width, self.config.max_batch, rows=rows
+            )
         except Exception as e:  # noqa: BLE001 — one bad cloud fails ITS batch only
             self.metrics.record_failed(len(live))
             for req in live:
                 try_set_exception(req.future, e)
             return
-        mb = MicroBatch(requests=tuple(live), bucket=bucket, policy=policy, batch=batch)
+        mb = MicroBatch(
+            requests=tuple(live),
+            bucket=bucket,
+            policy=policy,
+            batch=batch,
+            cache=self.cache,
+            cache_entries=entries,
+        )
         with self._inflight_cond:
             self._inflight.add(mb)
         fut = self.dispatch_fn(mb)

@@ -1,0 +1,119 @@
+"""Property tests for serve/hashing.py — the content-address contract.
+
+The cache key must be TOLERANT of float noise below the quantization step
+(repeat sweeps of a static scene collide on purpose) and SENSITIVE to
+everything that changes the preprocessing answer: point permutation (results
+index by row), translation/scale (neighborhoods live in absolute
+coordinates), shape and feature columns.  See the hashing module docstring
+for why each invariance is intentional.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from _hypothesis import HAVE_HYPOTHESIS, given, settings, st
+
+from repro.serve.hashing import DEFAULT_QUANT_STEP, content_key, quantize_cloud
+
+STEP = 1e-3
+
+
+def _cloud(n=32, width=3, seed=0):
+    rng = np.random.default_rng(seed)
+    # snap to the lattice so sub-step jitter provably stays inside the cell
+    base = rng.standard_normal((n, width)).astype(np.float64)
+    return (np.round(base / STEP) * STEP).astype(np.float32)
+
+
+if HAVE_HYPOTHESIS:
+    seeds = st.integers(min_value=0, max_value=2**31 - 1)
+    sizes = st.integers(min_value=1, max_value=64)
+else:  # placeholders; @given skips the tests anyway
+    seeds = sizes = None
+
+
+class TestNoiseTolerance:
+    @settings(max_examples=50, deadline=None)
+    @given(seed=seeds, n=sizes)
+    def test_sub_step_noise_collides(self, seed, n):
+        # noise < step/2 around lattice-cell centres never changes the key —
+        # the static-scene / consecutive-sweep case the cache exists for
+        cloud = _cloud(n, seed=seed)
+        rng = np.random.default_rng(seed + 1)
+        noise = (rng.uniform(-0.49, 0.49, cloud.shape) * STEP).astype(np.float32)
+        assert content_key(cloud, STEP) == content_key(cloud + noise, STEP)
+
+    @settings(max_examples=50, deadline=None)
+    @given(seed=seeds)
+    def test_key_is_deterministic(self, seed):
+        cloud = _cloud(seed=seed)
+        assert content_key(cloud, STEP) == content_key(cloud.copy(), STEP)
+
+    def test_super_step_perturbation_changes_key(self):
+        cloud = _cloud(seed=7)
+        moved = cloud.copy()
+        moved[0, 0] += 10 * STEP  # clearly a different lattice cell
+        assert content_key(cloud, STEP) != content_key(moved, STEP)
+
+
+class TestIntentionalSensitivity:
+    @settings(max_examples=50, deadline=None)
+    @given(seed=seeds)
+    def test_permutation_changes_key(self, seed):
+        # preprocessing indexes the cloud by ROW: a permutation-invariant key
+        # would serve row-misaligned cached neighborhoods
+        cloud = _cloud(n=16, seed=seed)
+        rng = np.random.default_rng(seed + 2)
+        perm = rng.permutation(cloud.shape[0])
+        if np.array_equal(perm, np.arange(cloud.shape[0])):
+            return  # identity permutation drawn — nothing to distinguish
+        permuted = cloud[perm]
+        if np.array_equal(quantize_cloud(cloud, STEP), quantize_cloud(permuted, STEP)):
+            return  # all permuted rows landed in identical cells (dup points)
+        assert content_key(cloud, STEP) != content_key(permuted, STEP)
+
+    @settings(max_examples=50, deadline=None)
+    @given(seed=seeds)
+    def test_translation_changes_key(self, seed):
+        # absolute coordinates are part of the neighborhood structure;
+        # rigid-motion reuse is a documented follow-on, not a hash property
+        cloud = _cloud(seed=seed)
+        assert content_key(cloud, STEP) != content_key(cloud + np.float32(0.5), STEP)
+
+    def test_scale_changes_key(self):
+        cloud = _cloud(seed=3)
+        assert content_key(cloud, STEP) != content_key(cloud * np.float32(2.0), STEP)
+
+    def test_shape_and_feature_columns_matter(self):
+        cloud = _cloud(n=16, width=5, seed=4)
+        assert content_key(cloud, STEP) != content_key(cloud[:8], STEP)
+        withf = cloud.copy()
+        withf[:, 3] += 10 * STEP  # feature column change, xyz identical
+        assert content_key(cloud, STEP) != content_key(withf, STEP)
+
+    def test_step_is_part_of_the_key(self):
+        cloud = _cloud(seed=5)
+        assert content_key(cloud, STEP) != content_key(cloud, STEP * 2)
+
+
+class TestQuantizeCloud:
+    def test_lattice_cells(self):
+        cloud = np.array([[0.0, 1e-3, -1e-3], [2.4e-3, 2.6e-3, 0.49e-3]], np.float32)
+        cells = quantize_cloud(cloud, 1e-3)
+        np.testing.assert_array_equal(cells, [[0, 1, -1], [2, 3, 0]])
+
+    def test_non_finite_values_hash_deterministically(self):
+        cloud = np.array([[np.nan, np.inf, -np.inf]], np.float32)
+        a = content_key(cloud, STEP)
+        b = content_key(cloud.copy(), STEP)
+        assert a == b
+        # each sentinel is distinct from a zero cell
+        assert a != content_key(np.zeros((1, 3), np.float32), STEP)
+
+    def test_rejects_non_positive_step(self):
+        with pytest.raises(ValueError):
+            quantize_cloud(np.zeros((2, 3), np.float32), 0.0)
+
+    def test_default_step_exported(self):
+        assert DEFAULT_QUANT_STEP == 1e-3

@@ -111,6 +111,35 @@ class TestKNN3Kernel:
             ri, _ = knn3_ref(qs, pts.T, k=k)
             np.testing.assert_array_equal(np.array(gi), np.array(ri))
 
+    @pytest.mark.parametrize(
+        "q,p", [(1, 100), (5, 130), (7, 128), (13, 257), (261, 129), (300, 640)]
+    )
+    def test_odd_shapes_match_oracle(self, q, p):
+        # regression: Q not a multiple of the sublane (8) used to require the
+        # op wrapper to guess a divisible block; the kernel now pads queries
+        # internally, so arbitrary Q/P go straight through
+        qs = _cloud((q, 3), seed=q)
+        pts = _cloud((p, 3), seed=p + 1)
+        gi, gd = knn3(qs, pts, backend="pallas", interpret=True)
+        ri, rd = knn3_ref(qs, pts.T)
+        assert gi.shape == (q, 3) and gd.shape == (q, 3)
+        np.testing.assert_array_equal(np.array(gi), np.array(ri))
+        np.testing.assert_allclose(np.array(gd), np.array(rd), rtol=1e-5)
+
+    def test_direct_kernel_bq_larger_than_q(self):
+        # regression: bq > qn after clamping (the default bq=256 with a tiny
+        # odd Q) must sublane-align and pad instead of failing the divisibility
+        # check — and give the same answer as a fitted block
+        from repro.kernels.knn3.kernel import knn3_pallas
+
+        qs = _cloud((5, 3), seed=3)
+        pts = _cloud((128, 3), seed=4).T
+        i_default, d_default = knn3_pallas(qs, pts, bq=256, interpret=True)
+        i_fit, d_fit = knn3_pallas(qs, pts, bq=8, interpret=True)
+        assert i_default.shape == (5, 3)
+        np.testing.assert_array_equal(np.array(i_default), np.array(i_fit))
+        np.testing.assert_array_equal(np.array(d_default), np.array(d_fit))
+
 
 class TestLatticeKernel:
     @pytest.mark.parametrize("m,p,ns", [(4, 128, 8), (16, 256, 16), (128, 512, 32)])

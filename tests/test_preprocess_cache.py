@@ -1,0 +1,386 @@
+"""Preprocess-cache subsystem tests.
+
+Three layers: PreprocessCache unit behavior (byte-budgeted LRU, explicit
+eviction, stats), the core.engine result-tree helpers the cache is built on
+(row slice / stack / splice / serialization round-trips), and the serving
+integration — cache-hit responses bitwise-equal to uncached recomputation,
+mixed hit/miss micro-batches preserving miss parity, the all-hit
+preprocess skip on both the sequential and pipelined execution paths, and
+the runtime-level hit-rate / saved-latency counters.
+"""
+
+import concurrent.futures
+import threading
+import time
+import typing
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.core.accelerator import get_accelerator
+from repro.core.engine import (
+    deserialize_result,
+    result_nbytes,
+    result_row,
+    result_set_row,
+    result_stack,
+    result_to_host,
+    serialize_result,
+)
+from repro.core.policy import ExecutionPolicy, resolve_policy
+from repro.serve import (
+    CacheConfig,
+    MicroBatch,
+    PreprocessCache,
+    RuntimeConfig,
+    ServingRuntime,
+    assemble_batch,
+)
+from repro.serve.pointcloud import pad_cloud
+from repro.serve.queue import Request
+
+jax.config.update("jax_platform_name", "cpu")
+
+MAX_BATCH = 4
+WAIT_S = 60
+CACHE_BYTES = 64 * 2**20
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return get_config("pointnet2-cls", smoke=True)  # n_points=256
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    return get_accelerator(cfg).init(jax.random.PRNGKey(0))
+
+
+def _clouds(k, n=256, seed=0, width=3):
+    rng = np.random.default_rng(seed)
+    return [rng.standard_normal((n, width)).astype(np.float32) for _ in range(k)]
+
+
+def _runtime(cfg, params, **kw):
+    kw.setdefault("max_batch", MAX_BATCH)
+    kw.setdefault("max_wait_s", 0.005)
+    kw.setdefault("max_queue", 64)
+    kw.setdefault("buckets", (cfg.n_points,))
+    kw.setdefault("cache_max_bytes", CACHE_BYTES)
+    return ServingRuntime(cfg, params, RuntimeConfig(**kw))
+
+
+# -- PreprocessCache unit behavior --------------------------------------------
+
+
+def _entry_payload(seed=0, n=10):
+    rng = np.random.default_rng(seed)
+    return rng.standard_normal(n).astype(np.float32)
+
+
+class TestPreprocessCacheLRU:
+    def _key(self, i):
+        return (256, ExecutionPolicy(), bytes([i]))
+
+    def test_insert_lookup_roundtrip(self):
+        cache = PreprocessCache(CacheConfig(max_bytes=1 << 20))
+        row = np.ones((4, 3), np.float32)
+        pre = _entry_payload()
+        assert cache.lookup(self._key(1)) is None  # miss counted
+        cache.insert(self._key(1), row, pre)
+        ent = cache.lookup(self._key(1))
+        assert ent is not None
+        np.testing.assert_array_equal(ent.row, row)
+        np.testing.assert_array_equal(ent.pre, pre)
+        s = cache.stats()
+        assert (s.hits, s.misses, s.insertions, s.entries) == (1, 1, 1, 1)
+        assert s.bytes == ent.nbytes == row.nbytes + pre.nbytes
+        assert s.hit_rate == 0.5
+
+    def test_entries_are_detached_and_read_only(self):
+        cache = PreprocessCache(CacheConfig(max_bytes=1 << 20))
+        row = np.ones((4, 3), np.float32)
+        pre = _entry_payload()
+        cache.insert(self._key(1), row, pre)
+        row[:] = 99.0  # caller mutates its buffers after insert
+        pre[:] = 99.0
+        ent = cache.lookup(self._key(1))
+        assert float(ent.row[0, 0]) == 1.0  # copy, not a view
+        with pytest.raises((ValueError, RuntimeError)):
+            ent.row[0, 0] = 5.0  # canonical rows are immutable
+
+    def test_byte_budget_evicts_lru(self):
+        row = np.zeros((4, 3), np.float32)  # 48 B
+        pre = np.zeros(10, np.float32)  # 40 B -> 88 B per entry
+        cache = PreprocessCache(CacheConfig(max_bytes=2 * 88))
+        cache.insert(self._key(1), row, pre)
+        cache.insert(self._key(2), row, pre)
+        assert cache.lookup(self._key(1)) is not None  # refresh 1: LRU is now 2
+        cache.insert(self._key(3), row, pre)  # evicts 2, not 1
+        assert cache.lookup(self._key(2)) is None
+        assert cache.lookup(self._key(1)) is not None
+        s = cache.stats()
+        assert s.evictions == 1 and s.entries == 2 and s.bytes == 2 * 88
+
+    def test_oversize_payload_refused(self):
+        cache = PreprocessCache(CacheConfig(max_bytes=50))
+        assert cache.insert(self._key(1), np.zeros((4, 3), np.float32),
+                            np.zeros(10, np.float32)) is None
+        s = cache.stats()
+        assert s.oversize == 1 and s.entries == 0 and s.insertions == 0
+
+    def test_reinsert_replaces_without_leaking_bytes(self):
+        cache = PreprocessCache(CacheConfig(max_bytes=1 << 20))
+        row = np.zeros((4, 3), np.float32)
+        cache.insert(self._key(1), row, np.zeros(10, np.float32))
+        cache.insert(self._key(1), row, np.zeros(20, np.float32))
+        s = cache.stats()
+        assert s.entries == 1
+        assert s.bytes == row.nbytes + 80
+
+    def test_explicit_evict_and_clear(self):
+        cache = PreprocessCache(CacheConfig(max_bytes=1 << 20))
+        row, pre = np.zeros((4, 3), np.float32), np.zeros(4, np.float32)
+        cache.insert(self._key(1), row, pre)
+        cache.insert(self._key(2), row, pre)
+        assert cache.evict(self._key(1)) is True
+        assert cache.evict(self._key(1)) is False  # already gone
+        cache.clear()
+        s = cache.stats()
+        assert s.entries == 0 and s.bytes == 0 and s.evictions == 2
+        assert len(cache) == 0
+
+    def test_key_for_separates_policies_and_buckets(self, cfg):
+        cache = PreprocessCache(CacheConfig(max_bytes=1 << 20))
+        row = np.ones((8, 3), np.float32)
+        a = resolve_policy(cfg, None)
+        b = resolve_policy(cfg, ExecutionPolicy(quant="sc_w16a16"))
+        assert cache.key_for(256, a, row) != cache.key_for(256, b, row)
+        assert cache.key_for(256, a, row) != cache.key_for(512, a, row)
+        assert cache.key_for(256, a, row) == cache.key_for(256, a, row.copy())
+
+    def test_thread_safe_under_concurrent_churn(self):
+        cache = PreprocessCache(CacheConfig(max_bytes=40 * 88))
+        row = np.zeros((4, 3), np.float32)
+        pre = np.zeros(10, np.float32)
+
+        def churn(tid):
+            for i in range(200):
+                k = (256, tid, bytes([i % 60]))
+                if cache.lookup(k) is None:
+                    cache.insert(k, row, pre)
+
+        threads = [threading.Thread(target=churn, args=(t,)) for t in range(4)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        s = cache.stats()
+        assert s.bytes <= 40 * 88
+        assert s.hits + s.misses == 4 * 200
+
+
+# -- core.engine result-tree helpers ------------------------------------------
+
+
+class _Pair(typing.NamedTuple):
+    a: np.ndarray
+    b: np.ndarray
+
+
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return _Pair(
+        rng.standard_normal((4, 3)).astype(np.float32),
+        rng.integers(0, 9, (4, 2)).astype(np.int32),
+    )
+
+
+class TestResultHelpers:
+    def test_nbytes_counts_every_leaf(self):
+        t = _tree()
+        assert result_nbytes(t) == t.a.nbytes + t.b.nbytes
+
+    def test_row_stack_roundtrip(self):
+        t = _tree()
+        rows = [result_row(t, i) for i in range(4)]
+        back = result_stack(rows)
+        np.testing.assert_array_equal(back.a, t.a)
+        np.testing.assert_array_equal(back.b, t.b)
+
+    def test_stack_pads_zero_filler_rows(self):
+        t = _tree()
+        out = result_stack([result_row(t, 0)], total=3)
+        assert out.a.shape == (3, 3)
+        np.testing.assert_array_equal(out.a[0], t.a[0])
+        assert not out.a[1:].any() and not out.b[1:].any()
+
+    def test_set_row_splices_in_place(self):
+        t = _tree(seed=1)
+        other = _tree(seed=2)
+        result_set_row(t, 2, result_row(other, 0))
+        np.testing.assert_array_equal(t.a[2], other.a[0])
+        np.testing.assert_array_equal(t.b[2], other.b[0])
+        np.testing.assert_array_equal(t.a[0], _tree(seed=1).a[0])  # others intact
+
+    def test_to_host_is_writable(self):
+        dev = _Pair(jnp.ones((2, 3)), jnp.zeros((2, 2), jnp.int32))
+        host = result_to_host(dev)
+        assert isinstance(host.a, np.ndarray) and host.a.flags.writeable
+        host.a[0, 0] = 7.0  # must not raise
+
+    def test_serialize_roundtrip_bitwise(self):
+        t = _tree(seed=3)
+        blob = serialize_result(t)
+        assert isinstance(blob, bytes) and len(blob) > 0
+        back = deserialize_result(blob, t)
+        assert isinstance(back, _Pair)
+        np.testing.assert_array_equal(back.a, t.a)
+        np.testing.assert_array_equal(back.b, t.b)
+        assert back.a.dtype == t.a.dtype and back.b.dtype == t.b.dtype
+
+
+# -- serving integration ------------------------------------------------------
+
+
+def _make_req(rt, cloud, i, policy=None):
+    pol = resolve_policy(rt.model_cfg, policy)
+    fitted = pad_cloud(cloud, 256)[0]
+    return Request(
+        id=i, cloud=cloud, n_orig=cloud.shape[0], bucket=256, policy=pol,
+        deadline_t=None, submit_t=0.0, future=concurrent.futures.Future(),
+        fitted=fitted, cache_key=rt.cache.key_for(256, pol, fitted),
+    )
+
+
+def _wait_insertions(rt, n, timeout_s=10.0):
+    """Block until the cache holds n insertions (all-miss fills are async)."""
+    deadline = time.monotonic() + timeout_s
+    while rt.cache.stats().insertions < n:
+        assert time.monotonic() < deadline, (
+            f"cache never reached {n} insertions: {rt.cache.stats()}"
+        )
+        time.sleep(0.005)
+
+
+def _mb(rt, reqs, entries=None):
+    ents = (
+        tuple(rt.cache.lookup(r.cache_key) for r in reqs)
+        if entries is None
+        else entries
+    )
+    rows = [e.row if e is not None else r.fitted for r, e in zip(reqs, ents)]
+    batch = assemble_batch(reqs, 256, 3, MAX_BATCH, rows=rows)
+    return MicroBatch(
+        requests=tuple(reqs), bucket=256, policy=reqs[0].policy, batch=batch,
+        cache=rt.cache, cache_entries=ents,
+    )
+
+
+class TestCachedDispatch:
+    def test_mixed_and_allhit_batches_bitwise(self, cfg, params):
+        """Deterministic micro-batch construction straight into the pool:
+        all-miss, mixed hit/miss, and all-hit batches must each be
+        bitwise-equal to the fused artifact on the same padded batch."""
+        rt = _runtime(cfg, params)  # never started: pool driven directly
+        try:
+            accel = get_accelerator(cfg, rt.default_policy)
+            clouds = _clouds(6, seed=10)
+
+            # all-miss: populates the cache, miss parity vs fused infer
+            mb1 = _mb(rt, [_make_req(rt, c, i) for i, c in enumerate(clouds[:4])])
+            assert mb1.n_hits == 0 and not mb1.all_hit
+            out1 = rt.pool.submit(mb1).result(timeout=WAIT_S)
+            ref1 = np.asarray(accel.infer(params, jnp.asarray(mb1.batch)))
+            np.testing.assert_array_equal(out1, ref1)
+            _wait_insertions(rt, 4)  # all-miss fills land on the insert thread
+            assert rt.cache.stats().insertions == 4
+
+            # mixed: 2 duplicates (hits) + 2 fresh
+            reqs2 = [_make_req(rt, c, i) for i, c in enumerate(
+                [clouds[0], clouds[4], clouds[1], clouds[5]])]
+            mb2 = _mb(rt, reqs2)
+            assert mb2.n_hits == 2 and not mb2.all_hit
+            out2 = rt.pool.submit(mb2).result(timeout=WAIT_S)
+            ref2 = np.asarray(accel.infer(params, jnp.asarray(mb2.batch)))
+            np.testing.assert_array_equal(out2, ref2)
+            assert rt.cache.stats().insertions == 6  # both fresh rows inserted
+
+            # all-hit: preprocess skipped, still bitwise
+            mb3 = _mb(rt, [_make_req(rt, c, i) for i, c in enumerate(clouds[:4])])
+            assert mb3.all_hit
+            out3 = rt.pool.submit(mb3).result(timeout=WAIT_S)
+            np.testing.assert_array_equal(out3, ref1)
+            skipped = [b for b in rt.metrics.batch_records if b.preprocess_skipped]
+            assert len(skipped) == 1 and skipped[0].n_real == 4
+        finally:
+            rt.stop(drain=False)
+
+    def test_near_duplicate_hits_serve_canonical_response(self, cfg, params):
+        """Sub-step noise collides by design: the hit's response is the
+        CANONICAL (first-seen) cloud's response, bit for bit."""
+        rt = _runtime(cfg, params)
+        try:
+            accel = get_accelerator(cfg, rt.default_policy)
+            cloud = (np.round(_clouds(1, seed=11)[0] / 1e-3) * 1e-3).astype(np.float32)
+            noisy = cloud + np.float32(1e-4)  # same lattice cells
+
+            mb1 = _mb(rt, [_make_req(rt, cloud, 0)])
+            out1 = rt.pool.submit(mb1).result(timeout=WAIT_S)
+            _wait_insertions(rt, 1)
+            mb2 = _mb(rt, [_make_req(rt, noisy, 1)])
+            assert mb2.all_hit  # the noisy sweep collided on purpose
+            out2 = rt.pool.submit(mb2).result(timeout=WAIT_S)
+            np.testing.assert_array_equal(out1, out2)
+            ref = np.asarray(accel.infer(params, jnp.asarray(mb1.batch)))
+            np.testing.assert_array_equal(out2, ref)
+        finally:
+            rt.stop(drain=False)
+
+
+class TestCachedRuntime:
+    def test_hits_bitwise_equal_uncached(self, cfg, params):
+        clouds = _clouds(4, seed=20)
+        with _runtime(cfg, params, cache_max_bytes=0) as rt:
+            ref = [rt.infer(c) for c in clouds]
+            assert rt.cache is None and rt.cache_stats() is None
+        with _runtime(cfg, params) as rt:
+            first = [rt.infer(c) for c in clouds]
+            second = [rt.infer(c) for c in clouds]
+            snap = rt.metrics.snapshot()
+            stats = rt.cache_stats()
+        for r, a, b in zip(ref, first, second):
+            np.testing.assert_array_equal(r, a)
+            np.testing.assert_array_equal(r, b)
+        assert stats.hits >= 4 and stats.entries == 4
+        assert snap.cache_hits >= 4 and snap.preprocess_skipped >= 1
+        assert 0.0 < snap.cache_hit_rate <= 1.0
+        assert "hit=" in snap.format_row()
+
+    def test_pipelined_policy_composes_with_cache(self, cfg, params):
+        piped = ExecutionPolicy(pipeline="pipelined")
+        clouds = _clouds(4, seed=21)
+        with _runtime(cfg, params, cache_max_bytes=0) as rt:
+            ref = [rt.infer(c, policy=piped) for c in clouds]
+        with _runtime(cfg, params) as rt:
+            first = [rt.infer(c, policy=piped) for c in clouds]
+            second = [rt.infer(c, policy=piped) for c in clouds]
+            stats = rt.cache_stats()
+            skipped = [b for b in rt.metrics.batch_records if b.preprocess_skipped]
+        for r, a, b in zip(ref, first, second):
+            np.testing.assert_array_equal(r, a)
+            np.testing.assert_array_equal(r, b)
+        assert stats.hits >= 4
+        assert skipped and all(b.policy_key[2] == "pipelined" for b in skipped)
+
+    def test_saved_latency_counter_populates(self, cfg, params):
+        cloud = _clouds(1, seed=22)[0]
+        with _runtime(cfg, params) as rt:
+            for _ in range(6):
+                rt.infer(cloud)
+            snap = rt.metrics.snapshot()
+        assert snap.preprocess_skipped >= 1
+        assert snap.cache_saved_s >= 0.0

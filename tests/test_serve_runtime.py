@@ -237,6 +237,43 @@ class TestMixedPolicies:
         assert stats.size == 2, stats
         assert stats.misses == 2, stats
 
+    def test_preprocess_cache_isolated_per_policy(self, cfg, params):
+        """The SAME cloud served under two policies must key two DIFFERENT
+        preprocess-cache entries: a result cached under one (quant, backend,
+        pipeline) key is never served to another policy, and each policy's
+        hit stays bitwise-equal to that policy's own artifact."""
+        quant = ExecutionPolicy(quant="sc_w16a16")
+        clouds = _clouds(MAX_BATCH, seed=9)
+        rt = _runtime(cfg, params, cache_max_bytes=64 * 2**20)
+        with rt:
+            fp32_1 = [rt.infer(c) for c in clouds]
+            # same clouds, different policy: must MISS (not reuse fp32
+            # neighborhoods computed under the fp32 artifact's backend)
+            q_1 = [rt.infer(c, policy=quant) for c in clouds]
+            fp32_2 = [rt.infer(c) for c in clouds]
+            q_2 = [rt.infer(c, policy=quant) for c in clouds]
+            stats = rt.cache_stats()
+
+        assert stats.entries == 2 * len(clouds), stats  # one entry per policy
+        assert stats.misses >= 2 * len(clouds), stats
+
+        # direct reference with the SAME batch composition the blocking
+        # serial submits produced (one real row + zero filler)
+        for pol, outs in ((None, fp32_1 + fp32_2), (quant, q_1 + q_2)):
+            accel = get_accelerator(cfg, pol)
+            resolved = resolve_policy(cfg, pol)
+            for i, out in enumerate(outs):
+                req = Request(id=i, cloud=clouds[i % len(clouds)], n_orig=256,
+                              bucket=256, policy=resolved, deadline_t=None,
+                              submit_t=0.0, future=None)
+                batch = assemble_batch([req], 256, 3, MAX_BATCH)
+                direct = np.asarray(accel.infer(params, jnp.asarray(batch)))[0]
+                np.testing.assert_array_equal(out, direct)
+        # the two policies produce different logits on this traffic — if a
+        # cached result ever crossed policies the equality above would fail,
+        # but make the premise explicit
+        assert not np.array_equal(fp32_1[0], q_1[0])
+
 
 class TestReplicaPool:
     def _mb(self, cfg, policy=None):
