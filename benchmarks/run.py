@@ -155,6 +155,17 @@ def pipeline_bench(smoke: bool = False) -> list[dict]:
     return pipeline_overlap.run(smoke=smoke)
 
 
+def serve_slo_bench(smoke: bool = False) -> list[dict]:
+    """SLO control plane under overload + mid-run replica kill (see
+    benchmarks/serve_load.run_slo).  ASSERTS the control-plane contracts —
+    interactive sheds nothing and holds its p95 budget, bulk absorbs ALL
+    shedding, and the autoscaler rejoins the killed replica with >= 90% of
+    pre-kill throughput — failures raise and fail the lane."""
+    from benchmarks import serve_load
+
+    return serve_load.run_slo(smoke=smoke)
+
+
 def _print_rows(rows: list) -> None:
     """Print wall-clock rows as name,us,note CSV (one place for the format)."""
     import math
@@ -177,13 +188,16 @@ def main() -> None:
     if smoke:
         # CI lane: the serving-runtime load benchmark, the correlated-sweep
         # preprocess-cache benchmark (asserting hit-rate > 0 and bitwise
-        # parity vs the uncached path) + the pipelined-overlap lane, reduced
-        # size — keeps the open-loop path, the cache hot path and the
-        # stage-overlap speedup exercised on every push without the full
-        # paper-table sweep.
+        # parity vs the uncached path), the pipelined-overlap lane + the SLO
+        # control-plane lane (two-class overload trace with a mid-run replica
+        # kill, asserting shed isolation, the interactive p95 budget and warm
+        # rejoin recovery), reduced size — keeps the open-loop path, the
+        # cache hot path, the stage-overlap speedup and the control plane
+        # exercised on every push without the full paper-table sweep.
         _print_rows(serve_bench(smoke=True))
         _print_rows(serve_cache_bench(smoke=True))
         _print_rows(pipeline_bench(smoke=True))
+        _print_rows(serve_slo_bench(smoke=True))
         return
     for mod_name, kwargs in [
         ("benchmarks.fig12b_preproc_energy", {}),
@@ -208,6 +222,7 @@ def main() -> None:
     _print_rows(serve_bench())
     _print_rows(serve_cache_bench())
     _print_rows(pipeline_bench())
+    _print_rows(serve_slo_bench())
 
 
 if __name__ == "__main__":

@@ -26,6 +26,16 @@ uncached ServingRuntime.  It ASSERTS hit-rate > 0 on the duplicate trace
 and bitwise parity of every response against an uncached direct
 recomputation — a failed assertion fails the CI bench-smoke lane.
   serve_cache/{path}_d{dup} : us = p95 latency; derived = throughput + cache detail.
+
+`run_slo` is the SLO control-plane benchmark: a two-class (interactive /
+bulk) trace offered ABOVE the pool's measured capacity, with replica 1
+chaos-killed mid-run and the autoscaler rejoining it warm.  It ASSERTS the
+load-shedding and recovery contracts — the interactive class sheds and
+expires nothing and holds its p95 inside the deadline budget, the bulk
+class absorbs ALL shedding, and post-rejoin throughput recovers to within
+10% of the pre-kill rate — so a regression in the control plane fails the
+CI bench-smoke lane, not just a dashboard.
+  serve_slo/{class} : us = p95 latency; derived = per-class counts + detail.
 """
 
 from __future__ import annotations
@@ -360,3 +370,306 @@ def run_cache(smoke: bool = False, seed: int = 0) -> list[dict]:
             ),
         })
     return rows
+
+
+def _slo_attempt(cfg, params, s_req, *, n_requests, rate, high, low, seed):
+    """One serve_slo trace: overload + mid-run kill; returns measurements.
+
+    Drives a 2-replica runtime with shedding and the autoscaler attached,
+    kills replica 1 at its `at_batch`-th real batch via the chaos injector,
+    and records per-completion (class, arrival, done) stamps on
+    time.monotonic() — the same clock the chaos/autoscaler events use, so
+    the pre-kill and post-rejoin throughput windows line up exactly.
+    """
+    from repro.serve import (
+        AutoscalerConfig,
+        ChaosInjector,
+        Fault,
+        RuntimeConfig,
+        ServingRuntime,
+        Shed,
+    )
+
+    max_batch = 4
+    s_batch = s_req * max_batch
+    rt = ServingRuntime(cfg, params, RuntimeConfig(
+        max_batch=max_batch,
+        max_wait_s=min(0.02, 2 * s_batch),
+        max_queue=max(48, n_requests // 4),
+        buckets=(cfg.n_points,),
+        n_replicas=2,
+        shed_threshold=max(24, n_requests // 8),
+        # rejoin-only autoscaler: depth thresholds out of reach, so the only
+        # actions are fault rejoins — the axis this benchmark measures
+        autoscaler=AutoscalerConfig(
+            poll_interval_s=0.02,
+            rejoin_delay_s=0.15,
+            scale_up_depth=1e9,
+            scale_down_depth=0.0,
+            scale_down_ticks=10**9,
+            cooldown_s=600.0,
+        ),
+    ))
+    rt.warmup()
+    # kill replica 1 roughly a third into its share of the trace: late
+    # enough for a stable pre-kill window, early enough that the post-rejoin
+    # window still sees plenty of traffic
+    at_batch = max(2, n_requests // (max_batch * 2 * 3))
+    chaos = ChaosInjector([Fault(replica_id=1, at_batch=at_batch, kind="kill")])
+    chaos.attach(rt.pool)
+
+    rng = np.random.default_rng(seed)
+    arrivals = np.cumsum(rng.exponential(1.0 / rate, size=n_requests))
+    width = 3 + cfg.in_features
+    cloud = np.zeros((cfg.n_points, width), np.float32)
+    clouds = [
+        (cloud + rng.standard_normal(cloud.shape).astype(np.float32))
+        for _ in range(8)
+    ]
+
+    lock = threading.Lock()
+    done = []  # (slo_name, t_arrival, t_done) of successful completions
+    shed_by = {high.name: 0, low.name: 0}
+    pending = []
+    t0 = time.monotonic()
+    with rt:
+        for i in range(n_requests):
+            wait = (t0 + arrivals[i]) - time.monotonic()
+            if wait > 0:
+                time.sleep(wait)
+            slo = high if i % 3 == 0 else low
+            t_arr = time.monotonic()
+
+            def _record(fut, name=slo.name, t_arr=t_arr):
+                if fut.exception() is None:
+                    with lock:
+                        done.append((name, t_arr, time.monotonic()))
+
+            try:
+                fut = rt.submit(clouds[i % len(clouds)], slo=slo)
+            except Shed:
+                shed_by[slo.name] += 1
+                continue
+            except Exception:  # noqa: BLE001 — queue-full backpressure
+                continue
+            fut.add_done_callback(_record)
+            pending.append(fut)
+        for fut in pending:
+            try:
+                fut.result(timeout=600)
+            except Exception:  # noqa: BLE001 — shed/expired futures
+                pass
+        # hold the runtime open until the rejoin lands (bounded)
+        deadline = time.monotonic() + 30
+        while rt.metrics.rejoins < 1 and time.monotonic() < deadline:
+            time.sleep(0.02)
+    snap = rt.metrics.snapshot()
+    kills = chaos.fired("kill")
+    rejoins = [e for e in rt.autoscaler.events if e.action == "rejoin"]
+    return {
+        "snap": snap,
+        "done": done,
+        "shed_by": shed_by,
+        "t_kill": kills[0].t if kills else None,
+        "t_rejoin": rejoins[0].t if rejoins else None,
+        "s_batch": s_batch,
+    }
+
+
+def _window_rate(done, t_lo, t_hi):
+    """Completions/s inside [t_lo, t_hi]; (rate, count)."""
+    n = sum(1 for _, _, t in done if t_lo <= t <= t_hi)
+    span = t_hi - t_lo
+    return (n / span if span > 0 else 0.0), n
+
+
+def _probe_capacity(cfg, params, s_req, *, n_probe=48):
+    """Closed-loop capacity probe: completions/s through a real 2-replica runtime.
+
+    The overload trace must be calibrated against what the serving stack can
+    actually sustain, not against n_replicas / s_infer: on a host where both
+    replicas share one core (CI runners), two replicas do NOT double
+    throughput, and an analytic rate would overload even the non-sheddable
+    interactive share — the p95 assertion would then measure the host, not
+    the control plane.  A closed-loop burst (submit everything, wait for
+    completion) through the same runtime shape as the trace measures the
+    true end-to-end rate, batching and scheduler overhead included.
+    """
+    from repro.serve import RuntimeConfig, ServingRuntime
+
+    max_batch = 4
+    s_batch = s_req * max_batch
+    rt = ServingRuntime(cfg, params, RuntimeConfig(
+        max_batch=max_batch,
+        max_wait_s=min(0.02, 2 * s_batch),
+        max_queue=2 * n_probe,
+        buckets=(cfg.n_points,),
+        n_replicas=2,
+    ))
+    rt.warmup()
+    rng = np.random.default_rng(7)
+    width = 3 + cfg.in_features
+    clouds = [
+        rng.standard_normal((cfg.n_points, width)).astype(np.float32)
+        for _ in range(4)
+    ]
+    with rt:
+        t0 = time.perf_counter()
+        futs = [rt.submit(clouds[i % len(clouds)]) for i in range(n_probe)]
+        for f in futs:
+            f.result(timeout=600)
+        wall = time.perf_counter() - t0
+    return n_probe / wall
+
+
+def run_slo(smoke: bool = False, seed: int = 0) -> list[dict]:
+    """SLO control-plane benchmark: two-class overload + mid-run replica kill.
+
+    One third of the trace is a non-sheddable interactive class with a
+    deadline, the rest a sheddable bulk class, offered at 1.5x the measured
+    2-replica capacity so the runtime MUST shed.  Replica 1 is killed
+    mid-trace; the autoscaler rejoins it warm.  Self-asserting (raises
+    RuntimeError, failing CI) on the control-plane contracts:
+
+      * interactive: shed == 0, expired == 0, p95 <= the deadline budget;
+      * bulk absorbs ALL shedding (and some shedding happened);
+      * exactly one kill, at least one warm rejoin, and post-rejoin
+        throughput >= 90% of the pre-kill rate.
+
+    The throughput-recovery check compares completion rates in the
+    [start, kill] and [rejoin + margin, end] windows on one shared host —
+    an open loop this short is noisy, so the trace is retried up to 3 times
+    and only a run that fails on its last attempt raises.  The class
+    contracts (shed/expired/parity of counts) are asserted on EVERY
+    attempt — they are deterministic and never excused by noise.
+    """
+    import jax
+
+    from repro.configs.base import get_config
+    from repro.core.accelerator import get_accelerator
+    from repro.serve import SLOClass
+
+    cfg = get_config("pointnet2-cls", smoke=True)
+    width = 3 + cfg.in_features
+    n_points = cfg.n_points
+    accel = get_accelerator(cfg)
+    params = accel.init(jax.random.PRNGKey(seed))
+
+    max_batch = 4
+    warm = np.zeros((max_batch, n_points, width), np.float32)
+    jax.block_until_ready(accel.infer(params, warm))
+    times = []
+    for _ in range(5):
+        t = time.perf_counter()
+        jax.block_until_ready(accel.infer(params, warm))
+        times.append(time.perf_counter() - t)
+    s_req = min(times) / max_batch
+    # 1.5x the MEASURED closed-loop capacity: sustained overload, so shedding
+    # is guaranteed, while the interactive third (0.5x capacity) stays
+    # servable — _probe_capacity explains why the rate cannot be derived
+    # analytically from s_req and the replica count
+    capacity = _probe_capacity(cfg, params, s_req)
+    rate = 1.5 * capacity
+    trace_s = 2.5 if smoke else 5.0
+    n_requests = int(min(600 if smoke else 1200, max(96, rate * trace_s)))
+
+    # deadline budget: generous on absolute terms AND in measured batch
+    # units, so a slow host doesn't fail on calibration noise; the assertion
+    # is against the p95 budget, the class deadline is 2x that (expired==0
+    # is strict)
+    s_eff = max_batch / capacity  # end-to-end batch time under serving
+    p95_budget = max(0.3, 25 * s_eff)
+    high = SLOClass(
+        "interactive", priority=10, deadline_s=2 * p95_budget,
+        sheddable=False, max_wait_s=min(0.005, s_eff),
+    )
+    low = SLOClass("bulk", priority=-10, deadline_s=None, sheddable=True)
+
+    last_err = None
+    for attempt in range(3):
+        m = _slo_attempt(
+            cfg, params, s_req,
+            n_requests=n_requests, rate=rate, high=high, low=low,
+            seed=seed + 101 * attempt,
+        )
+        snap, done = m["snap"], m["done"]
+        hi_cls = snap.for_class(high.name)
+        lo_cls = snap.for_class(low.name)
+        lat_hi = [t1 - t_arr for name, t_arr, t1 in done if name == high.name]
+        lat_lo = [t1 - t_arr for name, t_arr, t1 in done if name == low.name]
+        p95_hi = float(np.percentile(lat_hi, 95)) if lat_hi else float("nan")
+        p95_lo = float(np.percentile(lat_lo, 95)) if lat_lo else float("nan")
+
+        # deterministic class contracts: asserted on every attempt
+        if hi_cls is None or hi_cls.shed != 0 or hi_cls.expired != 0:
+            raise RuntimeError(
+                f"serve_slo: interactive class was shed/expired ({hi_cls})"
+            )
+        if snap.shed == 0 or lo_cls is None or lo_cls.shed != snap.shed:
+            raise RuntimeError(
+                "serve_slo: bulk did not absorb all shedding "
+                f"(total {snap.shed}, bulk {lo_cls and lo_cls.shed})"
+            )
+        if snap.evictions < 1:
+            raise RuntimeError("serve_slo: chaos kill did not evict")
+
+        # noise-prone contracts: retried
+        try:
+            if not np.isfinite(p95_hi) or p95_hi > p95_budget:
+                raise RuntimeError(
+                    f"serve_slo: interactive p95 {p95_hi * 1e3:.1f}ms over "
+                    f"budget {p95_budget * 1e3:.1f}ms"
+                )
+            if m["t_kill"] is None or m["t_rejoin"] is None or snap.rejoins < 1:
+                raise RuntimeError(
+                    f"serve_slo: kill/rejoin cycle incomplete "
+                    f"(kill={m['t_kill']}, rejoin={m['t_rejoin']})"
+                )
+            t_first = min(t_arr for _, t_arr, _ in done)
+            t_last = max(t1 for _, _, t1 in done)
+            thr_pre, n_pre = _window_rate(done, t_first, m["t_kill"])
+            thr_post, n_post = _window_rate(
+                done, m["t_rejoin"] + 2 * m["s_batch"], t_last
+            )
+            if n_pre < 8 or n_post < 8:
+                raise RuntimeError(
+                    f"serve_slo: windows too thin (pre {n_pre}, post {n_post})"
+                )
+            if thr_post < 0.9 * thr_pre:
+                raise RuntimeError(
+                    f"serve_slo: post-rejoin throughput {thr_post:.1f}/s < 90% "
+                    f"of pre-kill {thr_pre:.1f}/s"
+                )
+        except RuntimeError as e:
+            last_err = e
+            continue
+
+        recovery_ms = (m["t_rejoin"] - m["t_kill"]) * 1e3
+        return [
+            {
+                "name": "serve_slo/interactive",
+                "us": p95_hi * 1e6,
+                "note": (
+                    f"completed={hi_cls.completed} shed=0 expired=0 "
+                    f"p95 {p95_hi * 1e3:.1f}ms <= budget {p95_budget * 1e3:.0f}ms"
+                ),
+            },
+            {
+                "name": "serve_slo/bulk",
+                "us": p95_lo * 1e6,
+                "note": (
+                    f"completed={lo_cls.completed} shed={lo_cls.shed} "
+                    f"(absorbed 100% of shedding; rate {rate:.1f}/s = 1.5x cap)"
+                ),
+            },
+            {
+                "name": "serve_slo/recovery",
+                "us": float("nan"),
+                "note": (
+                    f"kill->rejoin {recovery_ms:.0f}ms; thr pre {thr_pre:.1f}/s"
+                    f" post {thr_post:.1f}/s ({thr_post / thr_pre:.2f}x);"
+                    f" attempt {attempt + 1}/3"
+                ),
+            },
+        ]
+    raise RuntimeError(f"serve_slo: failed after 3 attempts: {last_err}")

@@ -7,13 +7,23 @@ replica pool with heartbeat eviction and the two-stage pipelined path),
 `metrics`, and `runtime` (the `ServingRuntime` facade most callers want).
 `hashing` / `preprocess_cache` implement the cross-request preprocess
 cache: content-addressed duplicate clouds skip the preprocess stage and
-enter the feature stage directly.  `pointcloud` / `step` are the
-synchronous per-batch serve functions.  See docs/ARCHITECTURE.md for the
-dataflow diagram.
+enter the feature stage directly.  The SLO control plane sits on top:
+`slo` (service classes with priority/deadline/shed policy), `autoscaler`
+(replica rejoin + queue-depth scaling) and `chaos` (deterministic fault
+injection for recovery tests).  `pointcloud` / `step` are the synchronous
+per-batch serve functions.  See docs/ARCHITECTURE.md for the dataflow
+diagram.
 """
 
+from repro.serve.autoscaler import Autoscaler, AutoscalerConfig, ScaleEvent  # noqa: F401
+from repro.serve.chaos import ChaosError, ChaosEvent, ChaosInjector, Fault  # noqa: F401
 from repro.serve.dispatch import NoReplicaAvailable, Replica, ReplicaPool  # noqa: F401
-from repro.serve.metrics import BatchRecord, MetricsSnapshot, ServeMetrics  # noqa: F401
+from repro.serve.metrics import (  # noqa: F401
+    BatchRecord,
+    ClassSnapshot,
+    MetricsSnapshot,
+    ServeMetrics,
+)
 from repro.serve.pointcloud import (  # noqa: F401
     PointCloudServeConfig,
     inverse_subsample_indices,
@@ -35,7 +45,9 @@ from repro.serve.queue import (  # noqa: F401
     QueueClosed,
     QueueFull,
     Request,
+    Shed,
 )
+from repro.serve.slo import BULK, DEFAULT, INTERACTIVE, SLOClass  # noqa: F401
 from repro.serve.runtime import (  # noqa: F401
     RuntimeConfig,
     ServingRuntime,

@@ -18,6 +18,18 @@ replicas, bounded by `max_retries` per batch; a batch that fails everywhere
 fails its future with the last error.  Dispatch is least-loaded (smallest
 in-flight count among alive replicas) — with shape buckets in play, queue
 depth is a better load proxy than round-robin.
+
+Eviction is two-way: `rejoin()` rebuilds an evicted replica in place — a
+fresh params copy pinned to its device, fresh stage executors and heartbeat
+pumps, every registered warmup batch replayed so each (bucket, policy)
+artifact is traced before real traffic lands on it, and (when the runtime
+runs a preprocess cache) the hottest cache entries pre-staged as committed
+device trees so the new replica's first all-hit batches skip the host
+restack.  `add_replica()`/`retire()` grow and shrink the pool the same way;
+`serve/autoscaler.py` drives all three from queue depth and evictions.  The
+optional `chaos` hook (serve/chaos.py) observes every real batch at
+execution start — the deterministic fault-injection point the recovery
+tests and the serve_slo benchmark drive.
 """
 
 from __future__ import annotations
@@ -75,7 +87,14 @@ class Replica:
         self.device = device
         self.params = jax.device_put(params, device)
         self.alive = True
+        self.retired = False  # scale-down (don't auto-rejoin) vs fault eviction
+        self.evicted_t: float | None = None  # when evict() ran (rejoin delay base)
         self.n_batches = 0
+        # pre-staged preprocess-cache entries: key -> (id(entry), committed
+        # device tree).  Filled at rejoin/scale-up warmup with the cache's
+        # hottest entries so the first all-hit batches skip the host restack;
+        # the entry id guards against an entry replaced under the same key.
+        self.staged: dict[tuple, tuple[int, object]] = {}
         self.inflight: dict[int, _Entry] = {}
         self.straggler = StragglerMonitor(on_straggler=on_straggler)
         self.heartbeat: HeartbeatMonitor | None = None
@@ -125,6 +144,19 @@ class Replica:
         """
         return self._feature_executor.submit(fn, *args)
 
+    def stage_entry(self, entry) -> None:
+        """Pre-stage one preprocess-cache entry as a committed device tree.
+
+        The per-row payload is transferred to this replica's device up
+        front, so an all-hit batch made of staged entries stacks them
+        device-side (`ReplicaPool._staged_stack`) instead of restacking on
+        the host and paying the transfer on the serving path.
+        """
+        self.staged[entry.key] = (
+            id(entry),
+            jax.device_put(entry.pre, self.device),
+        )
+
     def shutdown(self):
         """Stop both stage executors without waiting.
 
@@ -153,6 +185,8 @@ class ReplicaPool:
         heartbeat_timeout_s: float | None = None,
         max_retries: int = 2,
         metrics: ServeMetrics | None = None,
+        cache=None,
+        stage_top_k: int = 8,
     ):
         devices = list(devices) if devices is not None else jax.devices()
         n = n_replicas if n_replicas is not None else len(devices)
@@ -161,15 +195,18 @@ class ReplicaPool:
         self.model_cfg = model_cfg
         self.max_retries = max_retries
         self.metrics = metrics or ServeMetrics()
+        self.cache = cache  # PreprocessCache | None — pre-staged on rejoin
+        self.stage_top_k = stage_top_k
+        self.chaos = None  # serve/chaos.py injector hook (tests/benchmarks)
+        self._params = params  # host reference: rejoin re-pins a fresh copy
+        self._devices = devices
+        self._heartbeat_timeout_s = heartbeat_timeout_s
+        self._warmup_mbs: list = []  # registered warmup batches, replayed on rejoin
         self._lock = threading.Lock()
         self._seq = 0
         # round-robin devices when asked for more replicas than devices
         # (useful on CPU: several logical replicas exercise the dispatch path)
-        self.replicas = [
-            Replica(i, devices[i % len(devices)], params,
-                    on_straggler=self.metrics.record_straggler)
-            for i in range(n)
-        ]
+        self.replicas = [self._make_replica(i) for i in range(n)]
         # background cache fill for all-miss batches (thread spawns on first
         # submit, so uncached pools pay nothing); single-threaded, so inserts
         # land in batch-completion order and a later duplicate's
@@ -178,28 +215,47 @@ class ReplicaPool:
             max_workers=1, thread_name_prefix="pc2im-cache-insert"
         )
         self._pumps: list[threading.Thread] = []
-        if heartbeat_timeout_s is not None:
-            for rep in self.replicas:
-                rep.heartbeat = HeartbeatMonitor(
-                    heartbeat_timeout_s,
-                    on_dead=lambda rid=rep.id: self.evict(rid, reason="heartbeat"),
-                ).start()
-                rep.feature_heartbeat = HeartbeatMonitor(
-                    heartbeat_timeout_s,
-                    on_dead=lambda rid=rep.id: self.evict(
-                        rid, reason="feature-heartbeat"
-                    ),
-                ).start()
-                for tag, submit, monitor in (
-                    ("", rep.submit, rep.heartbeat),
-                    ("-feat", rep.submit_feature, rep.feature_heartbeat),
-                ):
-                    pump = threading.Thread(
-                        target=self._pump, args=(rep, submit, monitor),
-                        daemon=True, name=f"pc2im-hb-pump-{rep.id}{tag}",
-                    )
-                    pump.start()
-                    self._pumps.append(pump)
+        for rep in self.replicas:
+            self._start_liveness(rep)
+
+    def _make_replica(self, rid: int) -> Replica:
+        """Construct one fresh Replica for slot `rid` (params re-pinned).
+
+        Shared by the constructor and `rejoin`/`add_replica`: the replica's
+        device follows the slot (round-robin over the pool's devices), so a
+        rejoined replica lands back on the device its predecessor used.
+        Liveness pumps are NOT started here — call `_start_liveness` after
+        the replica is visible in `self.replicas`.
+        """
+        return Replica(
+            rid,
+            self._devices[rid % len(self._devices)],
+            self._params,
+            on_straggler=self.metrics.record_straggler,
+        )
+
+    def _start_liveness(self, rep: Replica) -> None:
+        """Attach heartbeat monitors + pumps to one replica (when enabled)."""
+        if self._heartbeat_timeout_s is None:
+            return
+        rep.heartbeat = HeartbeatMonitor(
+            self._heartbeat_timeout_s,
+            on_dead=lambda rid=rep.id: self.evict(rid, reason="heartbeat"),
+        ).start()
+        rep.feature_heartbeat = HeartbeatMonitor(
+            self._heartbeat_timeout_s,
+            on_dead=lambda rid=rep.id: self.evict(rid, reason="feature-heartbeat"),
+        ).start()
+        for tag, submit, monitor in (
+            ("", rep.submit, rep.heartbeat),
+            ("-feat", rep.submit_feature, rep.feature_heartbeat),
+        ):
+            pump = threading.Thread(
+                target=self._pump, args=(rep, submit, monitor),
+                daemon=True, name=f"pc2im-hb-pump-{rep.id}{tag}",
+            )
+            pump.start()
+            self._pumps.append(pump)
 
     # -- health ---------------------------------------------------------------
 
@@ -232,6 +288,7 @@ class ReplicaPool:
             if not rep.alive:
                 return
             rep.alive = False
+            rep.evicted_t = time.monotonic()
             orphans = list(rep.inflight.values())
             rep.inflight.clear()
         self.metrics.record_eviction()
@@ -245,6 +302,136 @@ class ReplicaPool:
                 entry.tried | {rid},
                 error=NoReplicaAvailable(f"replica {rid} evicted ({reason})"),
             )
+
+    def retire(self, rid: int) -> bool:
+        """Scale-down eviction: like `evict` but opts out of auto-rejoin.
+
+        The autoscaler retires replicas when the queue runs shallow;
+        `retired=True` keeps its rejoin loop from immediately reviving the
+        slot (a later scale-up still can, via `rejoin`).  Returns False if
+        the replica was already dead.
+        """
+        with self._lock:
+            rep = self.replicas[rid]
+            if not rep.alive:
+                return False
+            rep.retired = True
+        self.evict(rid, reason="scale-down")
+        return True
+
+    def rejoin(self, rid: int, *, warm: bool = True) -> bool:
+        """Re-admit an evicted replica slot with a fresh warm replica.
+
+        The two-way half of eviction: a fresh `Replica` (new params copy on
+        the slot's device, new stage executors, new heartbeat pumps)
+        replaces the dead one IN PLACE, so in-flight `tried` sets — which
+        exclude the slot by id — stay meaningful for batches that failed on
+        the predecessor.  With `warm=True` (the default) every registered
+        warmup batch is replayed on the new replica before it is marked
+        alive for dispatch, so real traffic never pays its compile latency,
+        and the preprocess cache's hottest entries are pre-staged on its
+        device (`Replica.stage_entry`).  Returns False when the slot is
+        still alive (nothing to do).
+        """
+        with self._lock:
+            if self.replicas[rid].alive:
+                return False
+            rep = self._make_replica(rid)
+            # visible to dispatch only after warmup: alive=False gates _pick
+            rep.alive = False
+            self.replicas[rid] = rep
+        try:
+            if warm:
+                for mb in list(self._warmup_mbs):
+                    self._warmup_on(rep, mb)
+                self._stage_cache(rep)
+        except Exception:
+            rep.shutdown()
+            raise
+        with self._lock:
+            rep.alive = True
+        self._start_liveness(rep)
+        self.metrics.record_rejoin()
+        return True
+
+    def add_replica(self, *, warm: bool = True) -> int:
+        """Grow the pool by one fresh replica slot; returns its id.
+
+        Scale-up path of the autoscaler once every existing slot is alive.
+        The new replica round-robins onto the pool's devices and is warmed
+        (and cache-pre-staged) exactly like a rejoin before dispatch sees
+        it.
+        """
+        with self._lock:
+            rid = len(self.replicas)
+            rep = self._make_replica(rid)
+            rep.alive = False  # invisible to _pick until warm
+            self.replicas.append(rep)
+        try:
+            if warm:
+                for mb in list(self._warmup_mbs):
+                    self._warmup_on(rep, mb)
+                self._stage_cache(rep)
+        except Exception:
+            rep.shutdown()
+            raise
+        with self._lock:
+            rep.alive = True
+        self._start_liveness(rep)
+        self.metrics.record_rejoin()
+        return rid
+
+    def _stage_cache(self, rep: Replica) -> None:
+        """Pre-stage the cache's hottest entries on one replica's device.
+
+        Best-effort: a failed transfer only costs the staged fast path, so
+        it must never fail a rejoin.
+        """
+        if self.cache is None:
+            return
+        try:
+            for entry in self.cache.top_entries(self.stage_top_k):
+                rep.stage_entry(entry)
+        except Exception:  # noqa: BLE001 — staging is an optimization only
+            rep.staged.clear()
+
+    def _warmup_on(self, rep: Replica, mb) -> None:
+        """Replay one registered warmup batch synchronously on one replica.
+
+        Used by rejoin/add_replica while the replica is still invisible to
+        dispatch (alive=False); attempts starts at the retry budget so a
+        failure fails THIS future instead of re-dispatching the warmup
+        batch to a healthy replica and masking the broken one.
+        """
+        entry = _Entry(mb, Future(), attempts=self.max_retries, tried=frozenset())
+        with self._lock:
+            self._seq += 1
+            entry.seq = self._seq
+            rep.inflight[entry.seq] = entry
+        rep.submit(self._execute, rep, entry)
+        entry.future.result(timeout=300)
+
+    def _staged_stack(self, rep: Replica, entries, total: int):
+        """Device-side restack of an all-hit batch from pre-staged entries.
+
+        Returns the committed device tree when EVERY entry is staged on
+        this replica and still current (the recorded entry id must match —
+        an entry replaced under the same content address invalidates its
+        staged copy); otherwise None, and the caller falls back to the
+        host restack + device_put.  Mirrors `result_stack` exactly —
+        zeros_like filler rows, then a leaf-wise stack — so the result is
+        bitwise-identical to the host path and hits the same executable.
+        """
+        rows = []
+        for e in entries:
+            rec = rep.staged.get(e.key)
+            if rec is None or rec[0] != id(e):
+                return None
+            rows.append(rec[1])
+        rows.extend([jax.tree.map(jnp.zeros_like, rows[0])] * (total - len(rows)))
+        return jax.device_put(
+            jax.tree.map(lambda *r: jnp.stack(r), *rows), rep.device
+        )
 
     # -- dispatch -------------------------------------------------------------
 
@@ -287,8 +474,9 @@ class ReplicaPool:
             rep.submit(self._execute, rep, entry)
         except RuntimeError as e:  # executor shut down between pick and submit
             with self._lock:
-                rep.inflight.pop(entry.seq, None)
-            self._retry(entry, rep.id, e)
+                was_inflight = rep.inflight.pop(entry.seq, None) is not None
+            if was_inflight:  # else a concurrent evict() already re-dispatched
+                self._retry(entry, rep.id, e)
 
     def _retry(self, entry: _Entry, rid: int, err: Exception):
         if entry.future.done():
@@ -303,6 +491,20 @@ class ReplicaPool:
                 rep.inflight.pop(entry.seq, None)
             return
         mb = entry.mb
+        if self.chaos is not None and mb.n_real > 0:
+            # deterministic fault-injection point: every REAL batch passes
+            # here on its replica's worker thread before either execution
+            # path (warmup batches are invisible to the injector).  A kill
+            # fault evicts the replica — eviction re-dispatches this entry,
+            # so the raise below must NOT retry it again (was_inflight)
+            try:
+                self.chaos.on_batch(self, rep, mb)
+            except Exception as e:  # noqa: BLE001 — injected fault
+                with self._lock:
+                    was_inflight = rep.inflight.pop(entry.seq, None) is not None
+                if was_inflight:
+                    self._retry(entry, rep.id, e)
+                return
         if getattr(mb.policy, "pipeline", "sequential") == "pipelined":
             self._execute_pipelined(rep, entry)
             return
@@ -322,9 +524,13 @@ class ReplicaPool:
                 rep.heartbeat.beat()
             self._record_success(rep, entry, logits, dt, preprocess_skipped=skipped)
         except Exception as e:  # noqa: BLE001 — any device/kernel failure
+            # retry only if the entry was still ours: a concurrent evict()
+            # already cleared inflight AND re-dispatched it — retrying here
+            # too would run the batch twice
             with self._lock:
-                rep.inflight.pop(entry.seq, None)
-            self._retry(entry, rep.id, e)
+                was_inflight = rep.inflight.pop(entry.seq, None) is not None
+            if was_inflight:
+                self._retry(entry, rep.id, e)
 
     # -- preprocess-cache execution -------------------------------------------
 
@@ -395,11 +601,14 @@ class ReplicaPool:
             # device_put: the feature artifact must only ever see COMMITTED
             # device trees — a host-numpy variant would compile a second
             # executable for the same shapes (a one-off multi-hundred-ms
-            # stall mid-traffic)
-            pre = jax.device_put(
-                result_stack([e.pre for e in entries], total=mb.batch.shape[0]),
-                rep.device,
-            )
+            # stall mid-traffic).  Pre-staged entries (warm rejoin) stack
+            # device-side and skip the host restack + transfer entirely
+            pre = self._staged_stack(rep, entries, mb.batch.shape[0])
+            if pre is None:
+                pre = jax.device_put(
+                    result_stack([e.pre for e in entries], total=mb.batch.shape[0]),
+                    rep.device,
+                )
             logits = np.asarray(
                 jax.block_until_ready(
                     accel.feature_from_cached(rep.params, batch, pre)
@@ -540,13 +749,16 @@ class ReplicaPool:
                     # cache skip composes with the pipeline: the worker hands
                     # the restacked payload straight to the feature thread —
                     # no preprocess dispatch at all for this batch
-                    # (device_put: committed, same executable as miss batches)
-                    pre = jax.device_put(
-                        result_stack(
-                            [e.pre for e in entries], total=mb.batch.shape[0]
-                        ),
-                        rep.device,
-                    )
+                    # (device_put: committed, same executable as miss batches;
+                    # pre-staged entries stack device-side, no host restack)
+                    pre = self._staged_stack(rep, entries, mb.batch.shape[0])
+                    if pre is None:
+                        pre = jax.device_put(
+                            result_stack(
+                                [e.pre for e in entries], total=mb.batch.shape[0]
+                            ),
+                            rep.device,
+                        )
                     skipped = True
                 else:
                     pre = accel.preprocess_stage(batch)  # async — hand off, don't block
@@ -562,8 +774,9 @@ class ReplicaPool:
                 raise
         except Exception as e:  # noqa: BLE001 — dispatch/executor failure
             with self._lock:
-                rep.inflight.pop(entry.seq, None)
-            self._retry(entry, rep.id, e)
+                was_inflight = rep.inflight.pop(entry.seq, None) is not None
+            if was_inflight:  # else a concurrent evict() already re-dispatched
+                self._retry(entry, rep.id, e)
 
     def _finish_pipelined(
         self,
@@ -608,8 +821,9 @@ class ReplicaPool:
                 )
             except Exception as e:  # noqa: BLE001 — any device/kernel failure
                 with self._lock:
-                    rep.inflight.pop(entry.seq, None)
-                self._retry(entry, rep.id, e)
+                    was_inflight = rep.inflight.pop(entry.seq, None) is not None
+                if was_inflight:  # else evict() already re-dispatched it
+                    self._retry(entry, rep.id, e)
         finally:
             rep.release_handoff()
 
@@ -620,8 +834,16 @@ class ReplicaPool:
 
         The runtime uses this to pre-trace each (bucket, policy) artifact —
         for pipelined policies this drives the two-stage path, so BOTH
-        sub-artifacts are traced before real traffic arrives.
+        sub-artifacts are traced before real traffic arrives.  Each distinct
+        (bucket, policy) batch is also REGISTERED: rejoin/add_replica replay
+        the registered set on a fresh replica so it joins warm.
         """
+        with self._lock:
+            if not any(
+                m.bucket == mb.bucket and m.policy == mb.policy
+                for m in self._warmup_mbs
+            ):
+                self._warmup_mbs.append(mb)
         futs = []
         for rep in self.alive_replicas():
             entry = _Entry(mb, Future(), attempts=self.max_retries, tried=frozenset())

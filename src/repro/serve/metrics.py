@@ -34,13 +34,43 @@ class BatchRecord:
 
 
 @dataclasses.dataclass(frozen=True)
+class ClassSnapshot:
+    """Per-SLO-class reduction inside one MetricsSnapshot.
+
+    Counts and latency percentiles attributed to one class name — the
+    load-shedding contract is asserted against these (a non-sheddable
+    class must show shed == 0 while the sheddable class absorbs it all).
+    """
+
+    name: str
+    submitted: int
+    completed: int
+    shed: int
+    expired: int
+    rejected: int
+    latency_p50_s: float
+    latency_p95_s: float
+
+    def format_row(self) -> str:
+        """One-line human summary of this class (serve_slo prints these)."""
+        return (
+            f"[{self.name}] submitted={self.submitted} completed={self.completed} "
+            f"shed={self.shed} expired={self.expired} rejected={self.rejected} "
+            f"p50={self.latency_p50_s * 1e3:.1f}ms p95={self.latency_p95_s * 1e3:.1f}ms"
+        )
+
+
+@dataclasses.dataclass(frozen=True)
 class MetricsSnapshot:
     """Immutable reduction of one runtime's metrics at a point in time.
 
     Counters (submitted..straggler_events) are totals since construction;
     latency percentiles, throughput and occupancy are computed over the
     retained reservoirs — exactly the numbers benchmarks and tests assert
-    on (see snapshot() for the definitions).
+    on (see snapshot() for the definitions).  `per_class` breaks the
+    request counters and latency percentiles down by SLO class; the
+    aggregate fields keep their pre-SLO definitions (shed requests are NOT
+    counted as rejected — each outcome is exactly one counter).
     """
 
     submitted: int
@@ -63,12 +93,26 @@ class MetricsSnapshot:
     cache_misses: int = 0  # preprocess-cache lookups that missed
     preprocess_skipped: int = 0  # all-hit batches that skipped the preprocess stage
     cache_saved_s: float = 0.0  # estimated batch latency the skips avoided
+    shed: int = 0  # requests load-shed (admission Shed + full-queue eviction)
+    rejoins: int = 0  # replicas re-admitted to the pool (warm rejoin / scale-up)
+    per_class: tuple[ClassSnapshot, ...] = ()  # per-SLO-class breakdown
 
     @property
     def cache_hit_rate(self) -> float:
         """hits / lookups of the preprocess cache, 0.0 with no lookups."""
         total = self.cache_hits + self.cache_misses
         return self.cache_hits / total if total else 0.0
+
+    def for_class(self, name: str) -> ClassSnapshot | None:
+        """The ClassSnapshot of one SLO class name, None if never seen."""
+        for cs in self.per_class:
+            if cs.name == name:
+                return cs
+        return None
+
+    def format_class_rows(self) -> str:
+        """Multi-line per-class summary (one ClassSnapshot.format_row each)."""
+        return "\n".join(cs.format_row() for cs in self.per_class)
 
     def format_row(self) -> str:
         """One-line human summary (the serve benchmarks print this)."""
@@ -87,8 +131,27 @@ class MetricsSnapshot:
         return row
 
 
+class _ClassStats:
+    """Mutable per-SLO-class tallies inside ServeMetrics (lock owned there)."""
+
+    __slots__ = ("submitted", "completed", "shed", "expired", "rejected", "latencies")
+
+    def __init__(self):
+        self.submitted = 0
+        self.completed = 0
+        self.shed = 0
+        self.expired = 0
+        self.rejected = 0
+        self.latencies: list[float] = []
+
+
 class ServeMetrics:
-    """Mutable, thread-safe metrics hub for one runtime instance."""
+    """Mutable, thread-safe metrics hub for one runtime instance.
+
+    Request-outcome recorders take an optional SLO class name; aggregate
+    counters always move, and the named class's breakdown moves with them
+    (the per-class view in `snapshot().per_class`).
+    """
 
     def __init__(self):
         self._lock = threading.Lock()
@@ -99,33 +162,49 @@ class ServeMetrics:
         self.failed = 0
         self.retries = 0
         self.evictions = 0
+        self.rejoins = 0
+        self.shed = 0
         self.straggler_events = 0
         self.cache_hits = 0
         self.cache_misses = 0
         self._latencies: list[float] = []
         self._depths: list[int] = []
         self._batches: list[BatchRecord] = []
+        self._by_class: dict[str, _ClassStats] = {}
         self._first_t: float | None = None
         self._last_t: float | None = None
 
+    def _cls(self, name: str | None) -> _ClassStats:
+        """Per-class tally for `name` (call under the lock); None -> default."""
+        return self._by_class.setdefault(name or "default", _ClassStats())
+
     # -- recording (one lock-protected append each) --------------------------
 
-    def record_submitted(self):
+    def record_submitted(self, slo_name: str | None = None):
         """Count one admitted request (starts the observation window)."""
         with self._lock:
             self.submitted += 1
+            self._cls(slo_name).submitted += 1
             if self._first_t is None:
                 self._first_t = time.monotonic()
 
-    def record_rejected(self):
+    def record_rejected(self, slo_name: str | None = None):
         """Count one request refused at admission (QueueFull/QueueClosed)."""
         with self._lock:
             self.rejected += 1
+            self._cls(slo_name).rejected += 1
 
-    def record_expired(self):
+    def record_shed(self, slo_name: str | None = None):
+        """Count one request load-shed (admission Shed or queued eviction)."""
+        with self._lock:
+            self.shed += 1
+            self._cls(slo_name).shed += 1
+
+    def record_expired(self, slo_name: str | None = None):
         """Count one request failed because its deadline passed."""
         with self._lock:
             self.expired += 1
+            self._cls(slo_name).expired += 1
 
     def record_failed(self, n: int = 1):
         """Count n requests failed by execution errors (not deadlines)."""
@@ -142,6 +221,11 @@ class ServeMetrics:
         with self._lock:
             self.evictions += 1
 
+    def record_rejoin(self):
+        """Count one replica re-admitted to the pool (warm rejoin/scale-up)."""
+        with self._lock:
+            self.rejoins += 1
+
     def record_straggler(self, _event=None):
         """Count one straggler event (slow-but-alive replica batch)."""
         with self._lock:
@@ -155,13 +239,17 @@ class ServeMetrics:
             else:
                 self.cache_misses += n
 
-    def record_completed(self, latency_s: float):
+    def record_completed(self, latency_s: float, slo_name: str | None = None):
         """Record one completed request and its end-to-end latency."""
         with self._lock:
             self.completed += 1
             self._last_t = time.monotonic()
             self._latencies.append(latency_s)
             del self._latencies[:-_RESERVOIR]
+            cls = self._cls(slo_name)
+            cls.completed += 1
+            cls.latencies.append(latency_s)
+            del cls.latencies[:-_RESERVOIR]
 
     def record_queue_depth(self, depth: int):
         """Sample the admission-queue depth at a scheduler drain."""
@@ -221,6 +309,25 @@ class ServeMetrics:
                 else 0.0
             )
             depths = np.asarray(self._depths, np.int64)
+            per_class = []
+            for name in sorted(self._by_class):
+                cls = self._by_class[name]
+                clat = np.asarray(cls.latencies, np.float64)
+                cp50, cp95 = (
+                    (float(np.percentile(clat, q)) for q in (50, 95))
+                    if clat.size
+                    else (0.0, 0.0)
+                )
+                per_class.append(ClassSnapshot(
+                    name=name,
+                    submitted=cls.submitted,
+                    completed=cls.completed,
+                    shed=cls.shed,
+                    expired=cls.expired,
+                    rejected=cls.rejected,
+                    latency_p50_s=cp50,
+                    latency_p95_s=cp95,
+                ))
             return MetricsSnapshot(
                 submitted=self.submitted,
                 completed=self.completed,
@@ -242,4 +349,7 @@ class ServeMetrics:
                 cache_misses=self.cache_misses,
                 preprocess_skipped=len(skipped),
                 cache_saved_s=saved,
+                shed=self.shed,
+                rejoins=self.rejoins,
+                per_class=tuple(per_class),
             )

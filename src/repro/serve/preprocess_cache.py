@@ -214,6 +214,21 @@ class PreprocessCache:
                 self._evictions += 1
         return entry
 
+    def top_entries(self, k: int) -> list[CacheEntry]:
+        """The k hottest resident entries (most hits, then most recent).
+
+        The replica pool pre-stages these on a rejoining replica's device
+        (`Replica.stage_entry`) so its first all-hit batches skip the host
+        restack.  No counters move and LRU order is untouched — this is an
+        introspection read, not a use.
+        """
+        with self._lock:
+            ranked = sorted(
+                enumerate(self._entries.values()),
+                key=lambda ie: (-ie[1].hits, -ie[0]),  # hits desc, then MRU
+            )
+            return [e for _, e in ranked[: max(0, k)]]
+
     # -- management -----------------------------------------------------------
 
     def evict(self, key: tuple) -> bool:

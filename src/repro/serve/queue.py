@@ -1,4 +1,4 @@
-"""Bounded admission queue — per-request futures, deadlines, backpressure.
+"""Bounded admission queue — per-class lanes, deadlines, backpressure, shedding.
 
 The front door of the serving runtime.  Every client request becomes a
 `Request` with its own `concurrent.futures.Future`; admission is bounded so
@@ -8,6 +8,17 @@ tail latency.  Deadlines are absolute `time.monotonic()` instants carried on
 the request; the scheduler fails expired requests with `DeadlineExceeded`
 the moment it sees them, so a queue that fell behind sheds exactly the work
 whose answer nobody is still waiting for.
+
+Requests carry an `SLOClass` (serve/slo.py) and wait in one lane per class.
+`drain` releases requests in priority order, earliest-deadline-first within
+a priority — so under backlog the interactive lane empties before the bulk
+lane is touched.  Load shedding is two-stage and always explicit:
+
+  * over the shed budget (`shed_threshold`) a sheddable admission is
+    rejected with `Shed` at the front door, and
+  * a completely full queue admits non-sheddable (or higher-priority)
+    traffic by evicting the newest queued request of the lowest sheddable
+    class — its future fails with `Shed`, never a silent drop.
 """
 
 from __future__ import annotations
@@ -18,10 +29,12 @@ import itertools
 import threading
 import time
 from concurrent.futures import Future, InvalidStateError
+from typing import Callable
 
 import numpy as np
 
 from repro.core.policy import ExecutionPolicy
+from repro.serve.slo import DEFAULT, SLOClass, drain_key
 
 
 def try_set_result(future: Future, result) -> bool:
@@ -72,6 +85,20 @@ class QueueClosed(AdmissionError):
         super().__init__("closed", "runtime is stopped")
 
 
+class Shed(AdmissionError):
+    """Load shed — a sheddable request gave way to higher-priority traffic.
+
+    Raised at admission when the backlog exceeds the shed budget, or set on
+    a queued sheddable request's future when a full queue must admit
+    non-sheddable traffic.  Distinct from QueueFull so clients (and
+    per-class metrics) can tell deliberate shedding from plain overflow.
+    """
+
+    def __init__(self, slo_name: str, detail: str = ""):
+        super().__init__("shed", detail or f"class {slo_name!r} shed under backlog")
+        self.slo_name = slo_name
+
+
 class DeadlineExceeded(TimeoutError):
     """Set on a request's future when its deadline passed before execution."""
 
@@ -101,11 +128,17 @@ class Request:
     # falls back to pad_cloud and never touches the cache.
     fitted: np.ndarray | None = None  # (bucket, 3 + F) pad_cloud row
     cache_key: tuple | None = None  # PreprocessCache.key_for address
+    slo: SLOClass = DEFAULT  # service class: priority, deadline, shed policy
 
     @property
     def key(self) -> tuple:
-        """Micro-batching key — requests batch together iff keys match."""
-        return (self.bucket, self.policy)
+        """Micro-batching key — requests batch together iff keys match.
+
+        The SLO class participates: a micro-batch never mixes classes, so
+        a latency-bound class never waits on another class's flush timer
+        and per-batch accounting stays attributable.
+        """
+        return (self.bucket, self.policy, self.slo)
 
     def expired(self, now: float | None = None) -> bool:
         """Whether the deadline passed (checked at every scheduling stage)."""
@@ -115,16 +148,57 @@ class Request:
 
 
 class AdmissionQueue:
-    """Bounded FIFO of Requests with blocking drain for the scheduler."""
+    """Bounded admission with per-SLO-class lanes and priority/EDF drain.
 
-    def __init__(self, max_depth: int):
+    One deque per SLOClass; `drain` releases requests by `slo.drain_key`
+    (priority descending, earliest deadline first within a priority, then
+    admission order), so the single-class default degenerates to the FIFO
+    the pre-SLO runtime had.  `shed_threshold` is the load-shedding budget:
+    above it sheddable admissions raise `Shed`; a completely full queue
+    evicts queued sheddable work to admit strictly-higher-priority traffic
+    (each victim's future fails with `Shed` and `on_shed` is told).
+    """
+
+    def __init__(
+        self,
+        max_depth: int,
+        *,
+        shed_threshold: int | None = None,
+        on_shed: Callable[[Request], None] | None = None,
+    ):
         if max_depth < 1:
             raise ValueError(f"max_depth must be >= 1, got {max_depth}")
+        if shed_threshold is not None and not (1 <= shed_threshold <= max_depth):
+            raise ValueError(
+                f"shed_threshold must be in [1, max_depth], got {shed_threshold}"
+            )
         self.max_depth = max_depth
-        self._items: collections.deque[Request] = collections.deque()
+        self.shed_threshold = shed_threshold
+        self.on_shed = on_shed
+        self._lanes: dict[SLOClass, collections.deque[Request]] = {}
+        self._depth = 0
         self._cond = threading.Condition()
         self._closed = False
         self._ids = itertools.count()
+
+    def _shed_victim(self, priority: int) -> Request | None:
+        """Pop the newest request of the lowest sheddable class below `priority`.
+
+        Called under the lock by the full-queue admission path.  The newest
+        request of the victim lane gives way (it would have been served
+        last within its class), preserving FIFO fairness for the survivors.
+        Returns None when nothing strictly lower-priority is sheddable —
+        the incoming request then takes the plain QueueFull rejection.
+        """
+        victim_lane = None
+        victim_prio = priority
+        for slo, lane in self._lanes.items():
+            if lane and slo.sheddable and slo.priority < victim_prio:
+                victim_lane, victim_prio = lane, slo.priority
+        if victim_lane is None:
+            return None
+        self._depth -= 1
+        return victim_lane.pop()
 
     def submit(
         self,
@@ -135,15 +209,22 @@ class AdmissionQueue:
         timeout_s: float | None = None,
         fitted: np.ndarray | None = None,
         cache_key: tuple | None = None,
+        slo: SLOClass | None = None,
     ) -> Future:
         """Admit one cloud; returns its future or raises AdmissionError.
 
-        Backpressure is synchronous: a full queue rejects HERE (QueueFull),
-        never silently drops, so open-loop clients observe the shed load.
+        Backpressure is synchronous and explicit: over the shed budget a
+        sheddable class is rejected with `Shed`; a full queue either evicts
+        a queued lower-priority sheddable request (full lanes, see
+        `_shed_victim`) or rejects with `QueueFull` — never a silent drop,
+        so open-loop clients observe exactly the load that was shed.
         `fitted`/`cache_key` carry the preprocess-cache probe when the
         runtime computed one (see Request).
         """
+        slo = slo if slo is not None else DEFAULT
         now = time.monotonic()
+        if timeout_s is None:
+            timeout_s = slo.deadline_s
         req = Request(
             id=-1,
             cloud=cloud,
@@ -155,37 +236,83 @@ class AdmissionQueue:
             future=Future(),
             fitted=fitted,
             cache_key=cache_key,
+            slo=slo,
         )
+        victim = None
         with self._cond:
             if self._closed:
                 raise QueueClosed()
-            if len(self._items) >= self.max_depth:
-                raise QueueFull(len(self._items), self.max_depth)
+            if (
+                self.shed_threshold is not None
+                and slo.sheddable
+                and self._depth >= self.shed_threshold
+            ):
+                raise Shed(
+                    slo.name,
+                    f"class {slo.name!r}: depth {self._depth} >= "
+                    f"shed budget {self.shed_threshold}",
+                )
+            if self._depth >= self.max_depth:
+                victim = self._shed_victim(slo.priority)
+                if victim is None:
+                    raise QueueFull(self._depth, self.max_depth)
             req.id = next(self._ids)
-            self._items.append(req)
+            self._lanes.setdefault(slo, collections.deque()).append(req)
+            self._depth += 1
             self._cond.notify()
+        if victim is not None:
+            # outside the lock: future callbacks (and on_shed) may re-enter
+            try_set_exception(
+                victim.future,
+                Shed(victim.slo.name, f"request {victim.id} evicted for "
+                                      f"priority-{req.slo.priority} admission"),
+            )
+            if self.on_shed is not None:
+                self.on_shed(victim)
         return req.future
+
+    def _pop_next(self) -> Request | None:
+        """Pop the drain-order winner across every lane (under the lock)."""
+        best = None
+        best_key = None
+        for slo, lane in self._lanes.items():
+            for req in lane:
+                key = drain_key(slo.priority, req.deadline_t, req.id)
+                if best_key is None or key < best_key:
+                    best, best_key = req, key
+        if best is None:
+            return None
+        self._lanes[best.slo].remove(best)
+        self._depth -= 1
+        return best
 
     def drain(self, max_items: int, timeout_s: float) -> list[Request]:
         """Pop up to max_items requests, blocking up to timeout_s for the first.
 
-        Returns [] on timeout or when the queue is closed and empty.
+        Requests come out in drain order — priority descending, earliest
+        deadline first within a priority, then admission order.  Returns []
+        on timeout or when the queue is closed and empty.
         """
         deadline = time.monotonic() + timeout_s
         with self._cond:
-            while not self._items and not self._closed:
+            while not self._depth and not self._closed:
                 remaining = deadline - time.monotonic()
                 if remaining <= 0 or not self._cond.wait(remaining):
                     break
             out = []
-            while self._items and len(out) < max_items:
-                out.append(self._items.popleft())
+            while self._depth and len(out) < max_items:
+                out.append(self._pop_next())
             return out
 
     def depth(self) -> int:
         """Number of requests currently waiting (the backpressure signal)."""
         with self._cond:
-            return len(self._items)
+            return self._depth
+
+    def depth_by_class(self) -> dict[str, int]:
+        """Waiting requests per SLO class name (autoscaler/operator signal)."""
+        with self._cond:
+            return {slo.name: len(lane) for slo, lane in self._lanes.items() if lane}
 
     @property
     def closed(self) -> bool:
@@ -196,12 +323,15 @@ class AdmissionQueue:
     def close(self) -> list[Request]:
         """Refuse new admissions and return whatever was still queued.
 
-        The runtime flushes the returned requests through one final
-        scheduling pass (drain=True) or cancels them (drain=False).
+        Leftovers come back in drain order.  The runtime flushes them
+        through one final scheduling pass (drain=True) or cancels them
+        (drain=False).
         """
         with self._cond:
             self._closed = True
-            left = list(self._items)
-            self._items.clear()
+            left = []
+            while self._depth:
+                left.append(self._pop_next())
+            self._lanes.clear()
             self._cond.notify_all()
             return left

@@ -33,12 +33,14 @@ import numpy as np
 
 from repro.core.accelerator import get_accelerator
 from repro.core.policy import ExecutionPolicy, resolve_policy
+from repro.serve.autoscaler import Autoscaler, AutoscalerConfig
 from repro.serve.dispatch import ReplicaPool
 from repro.serve.hashing import DEFAULT_QUANT_STEP
 from repro.serve.metrics import ServeMetrics
 from repro.serve.preprocess_cache import CacheConfig, PreprocessCache
-from repro.serve.queue import AdmissionError, AdmissionQueue
+from repro.serve.queue import AdmissionError, AdmissionQueue, Shed
 from repro.serve.scheduler import BatchScheduler, MicroBatch, SchedulerConfig, bucket_for
+from repro.serve.slo import SLOClass
 
 
 @dataclasses.dataclass(frozen=True)
@@ -53,6 +55,11 @@ class RuntimeConfig:
     cache_max_bytes > 0 enables the cross-request preprocess cache
     (serve/preprocess_cache.py): duplicate clouds — within cache_quant_step
     float noise — skip the preprocess stage on repeat requests.
+    shed_threshold enables load shedding (serve/slo.py): sheddable classes
+    are rejected with `Shed` once the queue backlog reaches it.
+    autoscaler attaches the replica autoscaling control loop
+    (serve/autoscaler.py): fault-evicted replicas rejoin warm and the pool
+    grows/shrinks with queue depth.
     """
 
     max_batch: int = 8
@@ -65,6 +72,8 @@ class RuntimeConfig:
     default_timeout_s: float | None = None  # per-request deadline default
     cache_max_bytes: int = 0  # 0 disables the preprocess cache
     cache_quant_step: float = DEFAULT_QUANT_STEP  # content-hash lattice pitch
+    shed_threshold: int | None = None  # backlog shed budget (None disables)
+    autoscaler: AutoscalerConfig | None = None  # None = no control loop
 
 
 class ServingRuntime:
@@ -102,7 +111,14 @@ class ServingRuntime:
             if self.config.cache_max_bytes > 0
             else None
         )
-        self.queue = AdmissionQueue(self.config.max_queue)
+        self.queue = AdmissionQueue(
+            self.config.max_queue,
+            shed_threshold=self.config.shed_threshold,
+            # full-queue evictions happen inside queue.submit, past the
+            # runtime's admission accounting — the callback keeps the shed
+            # counter (and the victim's class breakdown) truthful
+            on_shed=lambda req: self.metrics.record_shed(req.slo.name),
+        )
         self.pool = ReplicaPool(
             model_cfg,
             params,
@@ -111,6 +127,12 @@ class ServingRuntime:
             heartbeat_timeout_s=self.config.heartbeat_timeout_s,
             max_retries=self.config.max_retries,
             metrics=self.metrics,
+            cache=self.cache,
+        )
+        self.autoscaler = (
+            Autoscaler(self.pool, self.queue, self.config.autoscaler)
+            if self.config.autoscaler is not None
+            else None
         )
         self.scheduler = BatchScheduler(
             self.queue,
@@ -119,7 +141,12 @@ class ServingRuntime:
             width=3 + model_cfg.in_features,
             buckets=self.buckets,
             config=SchedulerConfig(
-                max_batch=self.config.max_batch, max_wait_s=self.config.max_wait_s
+                max_batch=self.config.max_batch,
+                max_wait_s=self.config.max_wait_s,
+                # two batches per replica keeps every replica busy (one
+                # executing, one queued) while the REST of the backlog stays
+                # in the admission queue, where priority/EDF/shedding apply
+                max_inflight=2 * len(self.pool.replicas),
             ),
             metrics=self.metrics,
             cache=self.cache,
@@ -141,6 +168,8 @@ class ServingRuntime:
         if not self._started:
             self._started = True
             self.scheduler.start()
+            if self.autoscaler is not None:
+                self.autoscaler.start()
         return self
 
     def stop(self, drain: bool = True):
@@ -151,6 +180,10 @@ class ServingRuntime:
         than left hanging — without a scheduler nothing could complete it.
         """
         self._stopped = True
+        if self.autoscaler is not None:
+            # stopped before the scheduler: a rejoin racing shutdown would
+            # spin up a fresh replica the pool.shutdown() below never sees
+            self.autoscaler.stop()
         if self._started:
             self.scheduler.stop(drain=drain)
             self._started = False
@@ -199,12 +232,16 @@ class ServingRuntime:
         *,
         policy: ExecutionPolicy | None = None,
         timeout_s: float | None = None,
+        slo: SLOClass | None = None,
     ):
         """Admit one (n, 3+F) cloud; returns a Future.
 
-        Raises AdmissionError (reason "queue_full" / "closed") as synchronous
-        backpressure; the future fails with DeadlineExceeded if the request's
-        deadline passes before it is batched.
+        Raises AdmissionError (reason "queue_full" / "closed" / "shed") as
+        synchronous backpressure; the future fails with DeadlineExceeded if
+        the request's deadline passes before it is batched.  `slo` selects
+        the service class (serve/slo.py) — priority in drain/flush order,
+        the default deadline when timeout_s is not given, and whether the
+        request may be load-shed under backlog.
         """
         cloud = np.asarray(cloud, np.float32)
         if (
@@ -221,9 +258,13 @@ class ServingRuntime:
             if policy is None
             else resolve_policy(self.model_cfg, policy)
         )
-        if timeout_s is None:
+        if timeout_s is None and (slo is None or slo.deadline_s is None):
+            # the class's default deadline wins over the runtime-wide one;
+            # queue.submit applies slo.deadline_s itself when timeout_s
+            # stays None
             timeout_s = self.config.default_timeout_s
         bucket = bucket_for(cloud.shape[0], self.buckets)
+        slo_name = slo.name if slo is not None else None
         # cache probe material (bucket fit + content hash) is deliberately
         # NOT computed here: admission must stay O(1) per request on the
         # client thread, so the scheduler computes it at assembly, where it
@@ -234,11 +275,15 @@ class ServingRuntime:
                 bucket=bucket,
                 policy=resolved,
                 timeout_s=timeout_s,
+                slo=slo,
             )
-        except AdmissionError:
-            self.metrics.record_rejected()
+        except Shed:
+            self.metrics.record_shed(slo_name)
             raise
-        self.metrics.record_submitted()
+        except AdmissionError:
+            self.metrics.record_rejected(slo_name)
+            raise
+        self.metrics.record_submitted(slo_name)
         return fut
 
     def infer(self, cloud: np.ndarray, **kwargs) -> np.ndarray:

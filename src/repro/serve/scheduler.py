@@ -18,11 +18,28 @@ admission queue and groups requests by `(bucket, policy)`:
     (dispatch.py) while "sequential" batches run the fused artifact, and
     the two kinds of traffic NEVER share a micro-batch or an artifact.
 
+  * SLO class — the request's `SLOClass` (serve/slo.py) completes the key,
+    so a micro-batch never mixes service classes: an interactive batch
+    never waits on a bulk class's flush timer, and a class with
+    `max_wait_s` set flushes its partial batches on its own tighter bound.
+
 A key flushes when it holds `max_batch` requests or its oldest request has
-waited `max_wait_s` — the classic dynamic-batching latency/occupancy knob.
-Batch assembly (`assemble_batch`) and result scatter (`scatter_results`)
+waited `max_wait_s` (tightened per class by `SLOClass.max_wait_s`) — the
+classic dynamic-batching latency/occupancy knob.  Keys flush in priority
+order, so when higher- and lower-class batches are ready in the same drain
+tick the higher class is dispatched (and starts executing) first.  Batch
+assembly (`assemble_batch`) and result scatter (`scatter_results`)
 are pure functions shared with the tests, which pin the scheduler's output
 bitwise against a direct `accel.infer` on the same padded batch.
+
+`max_inflight` bounds dispatched-but-unfinished batches.  This is what
+makes the SLO policy REAL under overload: without it the drain loop shovels
+the whole backlog into the replicas' FIFO executor queues, where priority,
+EDF and shedding no longer apply (an interactive batch waits behind every
+bulk batch dispatched before it).  With the bound, the scheduler only
+drains what the replicas can actually absorb, the backlog stays in the
+admission queue — drained priority-first, shed above the budget — and a
+later high-class arrival overtakes every bulk request still queued.
 """
 
 from __future__ import annotations
@@ -52,6 +69,11 @@ class SchedulerConfig:
     max_batch: int = 8  # static batch dim of every micro-batch
     max_wait_s: float = 0.005  # flush a partial batch after this long
     drain_tick_s: float = 0.002  # scheduler wake-up granularity
+    # dispatched-but-unfinished batch bound (None = unbounded).  Set it to a
+    # small multiple of the replica count so overload backlog stays in the
+    # admission queue (where priority/EDF/shedding act) instead of the
+    # replicas' FIFO executor queues (where nothing does)
+    max_inflight: int | None = None
 
 
 @dataclasses.dataclass(frozen=True, eq=False)  # identity hash: lives in sets
@@ -228,6 +250,13 @@ class BatchScheduler:
 
     # -- drain loop -----------------------------------------------------------
 
+    def _budget(self) -> int | None:
+        """Batches the scheduler may still dispatch right now (None = ∞)."""
+        if self.config.max_inflight is None:
+            return None
+        with self._inflight_cond:
+            return self.config.max_inflight - len(self._inflight)
+
     def _run(self):
         cfg = self.config
         while not self._stop.is_set():
@@ -235,6 +264,15 @@ class BatchScheduler:
             # throw (it serves every OTHER request too) — _dispatch already
             # fails the affected batch; this is the last-resort guard
             try:
+                budget = self._budget()
+                if budget is not None and budget <= 0:
+                    # replicas saturated: leave the backlog in the admission
+                    # queue — draining it now would freeze its priority order
+                    # into FIFO executor queues.  Wake when a batch finishes
+                    with self._inflight_cond:
+                        if len(self._inflight) >= self.config.max_inflight:
+                            self._inflight_cond.wait(cfg.drain_tick_s)
+                    continue
                 reqs = self.queue.drain(cfg.max_batch, cfg.drain_tick_s)
                 if reqs:
                     self.metrics.record_queue_depth(self.queue.depth() + len(reqs))
@@ -257,22 +295,48 @@ class BatchScheduler:
         if try_set_exception(
             req.future, DeadlineExceeded(f"request {req.id} deadline passed")
         ):
-            self.metrics.record_expired()
+            self.metrics.record_expired(req.slo.name)
+
+    def _key_order(self, key: tuple) -> tuple:
+        """Flush order of pending keys: higher-priority classes first."""
+        return (-key[2].priority, key[2].name)
+
+    def _max_wait(self, key: tuple) -> float:
+        """Partial-batch flush wait for one key — per-class bound applied."""
+        slo_wait = key[2].max_wait_s
+        if slo_wait is None:
+            return self.config.max_wait_s
+        return min(self.config.max_wait_s, slo_wait)
 
     def _flush_ready(self):
         now = time.monotonic()
-        for key in list(self._pending):
+        budget = self._budget()
+        for key in sorted(self._pending, key=self._key_order):
+            # priority-first AND budget-aware: when capacity is scarce the
+            # highest class takes the remaining dispatch slots
+            if budget is not None and budget <= 0:
+                return
             lst = self._pending[key]
-            while len(lst) >= self.config.max_batch:
+            while len(lst) >= self.config.max_batch and (budget is None or budget > 0):
                 chunk, self._pending[key] = lst[: self.config.max_batch], lst[self.config.max_batch :]
                 lst = self._pending[key]
                 self._dispatch(key, chunk)
-            if lst and now - lst[0].submit_t >= self.config.max_wait_s:
+                if budget is not None:
+                    budget -= 1
+            if (
+                lst
+                and (budget is None or budget > 0)
+                and now - lst[0].submit_t >= self._max_wait(key)
+            ):
                 self._pending[key] = []
                 self._dispatch(key, lst)
+                if budget is not None:
+                    budget -= 1
 
     def _flush_all(self):
-        for key in list(self._pending):
+        # stop-time drain: the inflight bound is deliberately ignored — the
+        # runtime is closing, the only goal is completing what was admitted
+        for key in sorted(self._pending, key=self._key_order):
             lst, self._pending[key] = self._pending[key], []
             for lo in range(0, len(lst), self.config.max_batch):
                 self._dispatch(key, lst[lo : lo + self.config.max_batch])
@@ -289,7 +353,7 @@ class BatchScheduler:
                 live.append(req)
         if not live:
             return
-        bucket, policy = key
+        bucket, policy, _slo = key
         try:
             entries: tuple = ()
             rows = None
@@ -362,7 +426,7 @@ class BatchScheduler:
                     # deadline-violating response as success
                     self._expire(req)
                 elif try_set_result(req.future, out):
-                    self.metrics.record_completed(now - req.submit_t)
+                    self.metrics.record_completed(now - req.submit_t, req.slo.name)
         finally:
             with self._inflight_cond:
                 self._inflight.discard(mb)

@@ -1,0 +1,684 @@
+"""SLO control-plane tests: priority/EDF drain, load shedding, per-class
+metrics, deterministic chaos injection, replica rejoin, and the autoscaler
+control loop.
+
+Layered like the subsystem: AdmissionQueue drain order and shedding are
+pinned as pure properties (hypothesis cross-checks the drain order against
+`slo.drain_key` on random traffic); ChaosInjector and Autoscaler units run
+against fakes where determinism matters; and the integration tests drive a
+real ServingRuntime through a kill -> rejoin -> recovery cycle and a
+two-class overload that must shed ONLY the sheddable class.  All waits are
+bounded (WAIT_S) so failures surface as assertions, never hangs.
+"""
+
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+from _hypothesis import given, settings, st
+
+from repro.configs.base import get_config
+from repro.core.accelerator import get_accelerator
+from repro.core.engine import result_row, result_stack, result_to_host
+from repro.core.policy import ExecutionPolicy, resolve_policy
+from repro.serve import (
+    BULK,
+    DEFAULT,
+    INTERACTIVE,
+    AdmissionQueue,
+    Autoscaler,
+    AutoscalerConfig,
+    ChaosInjector,
+    Fault,
+    MicroBatch,
+    PreprocessCache,
+    QueueFull,
+    ReplicaPool,
+    RuntimeConfig,
+    ServeMetrics,
+    ServingRuntime,
+    Shed,
+    SLOClass,
+)
+from repro.serve.preprocess_cache import CacheConfig
+from repro.serve.queue import Request
+from repro.serve.slo import drain_key
+
+jax.config.update("jax_platform_name", "cpu")
+
+MAX_BATCH = 4
+WAIT_S = 60  # bound on every future/result wait: fail, never hang
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return get_config("pointnet2-cls", smoke=True)  # n_points=256
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    return get_accelerator(cfg).init(jax.random.PRNGKey(0))
+
+
+def _clouds(k, n=256, seed=0, width=3):
+    rng = np.random.default_rng(seed)
+    return [rng.standard_normal((n, width)).astype(np.float32) for _ in range(k)]
+
+
+def _runtime(cfg, params, **kw):
+    kw.setdefault("max_batch", MAX_BATCH)
+    kw.setdefault("max_wait_s", 0.005)
+    kw.setdefault("max_queue", 64)
+    kw.setdefault("buckets", (cfg.n_points,))
+    return ServingRuntime(cfg, params, RuntimeConfig(**kw))
+
+
+CLOUD = np.zeros((8, 3), np.float32)
+POL = ExecutionPolicy()
+
+
+def _submit(q, slo=None, timeout_s=None):
+    return q.submit(CLOUD, bucket=256, policy=POL, slo=slo, timeout_s=timeout_s)
+
+
+# -- SLOClass + drain order ---------------------------------------------------
+
+
+class TestSLOClass:
+    def test_validation(self):
+        with pytest.raises(ValueError, match="name"):
+            SLOClass("")
+        with pytest.raises(ValueError, match="deadline_s"):
+            SLOClass("x", deadline_s=-1.0)
+        with pytest.raises(ValueError, match="max_wait_s"):
+            SLOClass("x", max_wait_s=-0.1)
+
+    def test_hashable_and_batch_key(self):
+        req_a = Request(0, CLOUD, 8, 256, POL, None, 0.0, None, slo=INTERACTIVE)
+        req_b = Request(1, CLOUD, 8, 256, POL, None, 0.0, None, slo=BULK)
+        assert req_a.key != req_b.key  # classes never share a micro-batch
+        assert req_a.key[:2] == req_b.key[:2]
+
+    def test_drain_key_total_order(self):
+        # priority beats deadline beats admission order
+        assert drain_key(10, 99.0, 5) < drain_key(0, 1.0, 0)
+        assert drain_key(0, 1.0, 9) < drain_key(0, 2.0, 0)
+        assert drain_key(0, None, 9) > drain_key(0, 1e9, 0)  # None sorts last
+        assert drain_key(0, None, 0) < drain_key(0, None, 1)
+
+
+class TestQueueDrainOrder:
+    def test_priority_order_across_classes(self):
+        q = AdmissionQueue(16)
+        futs = {
+            "bulk": _submit(q, BULK),
+            "default": _submit(q, None),
+            "interactive": _submit(q, INTERACTIVE),
+        }
+        out = q.drain(16, timeout_s=1.0)
+        assert [r.slo.name for r in out] == ["interactive", "default", "bulk"]
+        assert [r.future for r in out] == [
+            futs["interactive"], futs["default"], futs["bulk"],
+        ]
+
+    def test_edf_within_one_class(self):
+        q = AdmissionQueue(16)
+        _submit(q, None, timeout_s=10.0)
+        _submit(q, None, timeout_s=1.0)
+        _submit(q, None, timeout_s=5.0)
+        out = q.drain(16, timeout_s=1.0)
+        deadlines = [r.deadline_t for r in out]
+        assert deadlines == sorted(deadlines)
+
+    def test_single_class_degenerates_to_fifo(self):
+        q = AdmissionQueue(16)
+        futs = [_submit(q) for _ in range(5)]
+        out = q.drain(16, timeout_s=1.0)
+        assert [r.future for r in out] == futs
+
+    @given(
+        traffic=st.lists(
+            st.tuples(
+                st.integers(min_value=-2, max_value=2),  # priority
+                st.one_of(st.none(), st.floats(0.001, 10.0)),  # timeout_s
+            ),
+            min_size=1,
+            max_size=24,
+        )
+    )
+    @settings(max_examples=40, deadline=None)
+    def test_drain_matches_drain_key_sort(self, traffic):
+        """Property: drain order == sorting admissions by slo.drain_key."""
+        q = AdmissionQueue(64)
+        for i, (prio, timeout) in enumerate(traffic):
+            slo = SLOClass(f"p{prio}", priority=prio)
+            _submit(q, slo, timeout_s=timeout)
+        out = q.drain(64, timeout_s=1.0)
+        assert len(out) == len(traffic)
+        keys = [drain_key(r.slo.priority, r.deadline_t, r.id) for r in out]
+        assert keys == sorted(keys)
+
+
+# -- load shedding ------------------------------------------------------------
+
+
+class TestLoadShedding:
+    def test_shed_threshold_rejects_sheddable_only(self):
+        q = AdmissionQueue(8, shed_threshold=2)
+        _submit(q, BULK)
+        _submit(q, BULK)
+        with pytest.raises(Shed) as exc:
+            _submit(q, BULK)  # over the budget and sheddable
+        assert exc.value.reason == "shed"
+        assert exc.value.slo_name == "bulk"
+        _submit(q, INTERACTIVE)  # non-sheddable sails past the budget
+        assert q.depth() == 3
+
+    def test_full_queue_evicts_newest_lowest_class(self):
+        shed_seen = []
+        q = AdmissionQueue(2, on_shed=shed_seen.append)
+        fut_old = _submit(q, BULK)
+        fut_new = _submit(q, BULK)
+        fut_hi = _submit(q, INTERACTIVE)  # full: evicts the NEWEST bulk
+        assert q.depth() == 2
+        with pytest.raises(Shed):
+            fut_new.result(timeout=WAIT_S)
+        assert not fut_old.done() and not fut_hi.done()
+        assert [r.future for r in shed_seen] == [fut_new]
+        out = q.drain(4, timeout_s=1.0)
+        assert [r.slo.name for r in out] == ["interactive", "bulk"]
+
+    def test_full_queue_without_victim_is_queue_full(self):
+        q = AdmissionQueue(2)
+        _submit(q, INTERACTIVE)
+        _submit(q, INTERACTIVE)
+        # equal priority is never preempted — and a SHEDDABLE incoming class
+        # can't displace anything above it either
+        with pytest.raises(QueueFull):
+            _submit(q, INTERACTIVE)
+        with pytest.raises(QueueFull):
+            _submit(q, BULK)
+
+    def test_depth_by_class(self):
+        q = AdmissionQueue(8)
+        _submit(q, BULK)
+        _submit(q, BULK)
+        _submit(q, INTERACTIVE)
+        assert q.depth_by_class() == {"bulk": 2, "interactive": 1}
+
+    def test_shed_threshold_validation(self):
+        with pytest.raises(ValueError, match="shed_threshold"):
+            AdmissionQueue(4, shed_threshold=5)
+        with pytest.raises(ValueError, match="shed_threshold"):
+            AdmissionQueue(4, shed_threshold=0)
+
+    def test_runtime_sheds_only_lowest_class(self, cfg, params):
+        """Two-class overload against a runtime whose scheduler never
+        drains (not started): shedding must hit ONLY the sheddable class,
+        deterministically."""
+        rt = _runtime(cfg, params, max_queue=16, shed_threshold=8)
+        try:
+            clouds = _clouds(1)
+            outcomes = {"bulk": 0, "interactive": 0}
+            for i in range(24):
+                slo = INTERACTIVE if i % 3 == 0 else BULK
+                try:
+                    rt.submit(clouds[0], slo=slo)
+                except Shed:
+                    outcomes[slo.name] += 1
+            snap = rt.metrics.snapshot()
+            assert outcomes["interactive"] == 0
+            assert outcomes["bulk"] > 0
+            assert snap.for_class("bulk").shed == outcomes["bulk"]
+            assert snap.for_class("interactive").shed == 0
+            assert snap.shed == outcomes["bulk"]
+        finally:
+            rt.stop(drain=False)
+
+
+# -- per-class metrics --------------------------------------------------------
+
+
+class TestPerClassMetrics:
+    def test_breakdown_and_aggregate_agree(self):
+        m = ServeMetrics()
+        m.record_submitted("interactive")
+        m.record_submitted("interactive")
+        m.record_submitted("bulk")
+        m.record_completed(0.010, "interactive")
+        m.record_completed(0.030, "interactive")
+        m.record_shed("bulk")
+        m.record_expired("bulk")
+        m.record_rejected()  # unclassed -> "default"
+        snap = m.snapshot()
+        inter = snap.for_class("interactive")
+        bulk = snap.for_class("bulk")
+        assert (inter.submitted, inter.completed, inter.shed) == (2, 2, 0)
+        assert (bulk.submitted, bulk.shed, bulk.expired) == (1, 1, 1)
+        assert snap.for_class("default").rejected == 1
+        assert snap.for_class("missing") is None
+        # aggregates stay the sums the pre-SLO runtime reported
+        assert (snap.submitted, snap.completed, snap.shed) == (3, 2, 1)
+        assert (snap.expired, snap.rejected, snap.rejoins) == (1, 1, 0)
+        assert inter.latency_p50_s == pytest.approx(0.020)
+        assert snap.latency_p50_s == pytest.approx(0.020)
+
+    def test_format_rows_stable(self):
+        m = ServeMetrics()
+        m.record_submitted("interactive")
+        m.record_completed(0.010, "interactive")
+        snap = m.snapshot()
+        # the aggregate one-liner keeps its pre-SLO shape
+        assert snap.format_row().startswith("completed=1 rejected=0 expired=0")
+        assert "[interactive]" in snap.format_class_rows()
+        assert "shed=0" in snap.for_class("interactive").format_row()
+
+    def test_per_class_sorted_by_name(self):
+        m = ServeMetrics()
+        for name in ("zeta", "alpha", "mid"):
+            m.record_submitted(name)
+        assert [c.name for c in m.snapshot().per_class] == ["alpha", "mid", "zeta"]
+
+
+# -- chaos injector -----------------------------------------------------------
+
+
+class _FakeRep:
+    def __init__(self, rid):
+        self.id = rid
+        self.alive = True
+
+
+class _FakePool:
+    def __init__(self):
+        self.evictions = []
+
+    def evict(self, rid, *, reason):
+        self.evictions.append((rid, reason))
+
+
+class _FakeMB:
+    n_real = 1
+
+
+class TestChaosInjector:
+    def test_fault_validation(self):
+        with pytest.raises(ValueError, match="kind"):
+            Fault(0, 0, kind="melt")
+        with pytest.raises(ValueError, match="at_batch"):
+            Fault(0, -1)
+        with pytest.raises(ValueError, match="duration_s"):
+            Fault(0, 0, kind="wedge")
+
+    def test_kill_fires_once_at_exact_index(self):
+        chaos = ChaosInjector([Fault(replica_id=1, at_batch=2, kind="kill")])
+        pool, mb = _FakePool(), _FakeMB()
+        rep0, rep1 = _FakeRep(0), _FakeRep(1)
+        for _ in range(5):
+            chaos.on_batch(pool, rep0, mb)  # wrong replica: never fires
+        chaos.on_batch(pool, rep1, mb)  # index 0
+        chaos.on_batch(pool, rep1, mb)  # index 1
+        with pytest.raises(Exception, match="killed at batch 2"):
+            chaos.on_batch(pool, rep1, mb)  # index 2: fires
+        assert pool.evictions == [(1, "chaos-kill")]
+        chaos.on_batch(pool, rep1, mb)  # at most once: index 3 passes
+        events = chaos.fired("kill")
+        assert len(events) == 1
+        assert (events[0].replica_id, events[0].batch_index) == (1, 2)
+
+    def test_slow_fault_delays_but_survives(self):
+        chaos = ChaosInjector([Fault(0, 0, kind="slow", duration_s=0.05)])
+        pool, rep = _FakePool(), _FakeRep(0)
+        t0 = time.monotonic()
+        chaos.on_batch(pool, rep, _FakeMB())
+        assert time.monotonic() - t0 >= 0.05
+        assert pool.evictions == []
+        assert rep.alive
+
+    def test_attach_installs_hook(self, cfg, params):
+        pool = ReplicaPool(cfg, params, n_replicas=1, metrics=ServeMetrics())
+        try:
+            chaos = ChaosInjector().attach(pool)
+            assert pool.chaos is chaos
+        finally:
+            pool.shutdown()
+
+
+# -- replica rejoin + warm state ----------------------------------------------
+
+
+def _mb(cfg, policy=None, requests=(), batch=None, cache=None):
+    return MicroBatch(
+        requests=tuple(requests),
+        bucket=cfg.n_points,
+        policy=resolve_policy(cfg, policy),
+        batch=(
+            batch
+            if batch is not None
+            else np.zeros((MAX_BATCH, cfg.n_points, 3), np.float32)
+        ),
+        cache=cache,
+    )
+
+
+class TestRejoin:
+    def test_rejoin_restores_capacity_warm(self, cfg, params):
+        metrics = ServeMetrics()
+        pool = ReplicaPool(cfg, params, n_replicas=2, metrics=metrics)
+        try:
+            pool.warmup(_mb(cfg))  # registers the (bucket, policy) batch
+            old = pool.replicas[1]
+            pool.evict(1, reason="test")
+            assert not pool.replicas[1].alive
+            assert pool.replicas[1].evicted_t is not None
+            assert pool.rejoin(1)
+            fresh = pool.replicas[1]
+            assert fresh is not old and fresh.alive and not fresh.retired
+            assert metrics.rejoins == 1
+            # the replay showed up as one more warmup batch on replica 1
+            warm_rids = [
+                b.replica_id for b in metrics.batch_records if b.n_real == 0
+            ]
+            assert warm_rids.count(1) == 2  # initial warmup + rejoin replay
+            out = pool.submit(_mb(cfg)).result(timeout=WAIT_S)
+            assert out.shape == (MAX_BATCH, cfg.n_classes)
+        finally:
+            pool.shutdown()
+
+    def test_rejoin_alive_slot_is_noop(self, cfg, params):
+        pool = ReplicaPool(cfg, params, n_replicas=1, metrics=ServeMetrics())
+        try:
+            assert not pool.rejoin(0)
+        finally:
+            pool.shutdown()
+
+    def test_retire_marks_no_auto_rejoin(self, cfg, params):
+        pool = ReplicaPool(cfg, params, n_replicas=2, metrics=ServeMetrics())
+        try:
+            assert pool.retire(1)
+            assert pool.replicas[1].retired and not pool.replicas[1].alive
+            assert not pool.retire(1)  # already dead
+        finally:
+            pool.shutdown()
+
+    def test_add_replica_grows_pool(self, cfg, params):
+        pool = ReplicaPool(cfg, params, n_replicas=1, metrics=ServeMetrics())
+        try:
+            rid = pool.add_replica()
+            assert rid == 1 and pool.replicas[1].alive
+            assert len(pool.alive_replicas()) == 2
+        finally:
+            pool.shutdown()
+
+    def test_rejoin_prestages_hot_cache_entries(self, cfg, params):
+        """A rejoined replica carries the cache's hottest entries staged on
+        its device, and the staged device-side restack is bitwise-equal to
+        the host restack path it replaces."""
+        accel = get_accelerator(cfg)
+        cache = PreprocessCache(CacheConfig(max_bytes=64 * 2**20))
+        batch = np.stack(
+            [c for c in _clouds(MAX_BATCH, n=cfg.n_points, seed=3)]
+        )
+        pre = result_to_host(accel.preprocess_stage(batch))
+        keys = []
+        for i in range(MAX_BATCH):
+            key = cache.key_for(cfg.n_points, resolve_policy(cfg, None), batch[i])
+            cache.insert(key, batch[i], result_row(pre, i))
+            keys.append(key)
+        for key in keys[:2]:  # make the first two entries the hottest
+            cache.lookup(key)
+        pool = ReplicaPool(
+            cfg, params, n_replicas=1, metrics=ServeMetrics(),
+            cache=cache, stage_top_k=2,
+        )
+        try:
+            pool.evict(0, reason="test")
+            assert pool.rejoin(0)
+            rep = pool.replicas[0]
+            assert len(rep.staged) == 2  # top-K bound respected
+            entries = [cache.peek(k) for k in keys[:2]]
+            assert all(e.key in rep.staged for e in entries)
+            staged = pool._staged_stack(rep, entries, MAX_BATCH)
+            host = result_stack([e.pre for e in entries], total=MAX_BATCH)
+            jax.tree.map(
+                lambda a, b: np.testing.assert_array_equal(np.asarray(a), b),
+                result_to_host(staged),
+                host,
+            )
+            # an unstaged entry forces the host fallback
+            assert pool._staged_stack(rep, [cache.peek(keys[3])], MAX_BATCH) is None
+        finally:
+            pool.shutdown()
+
+
+# -- autoscaler ---------------------------------------------------------------
+
+
+class _FakeQueue:
+    def __init__(self, depth=0):
+        self._depth = depth
+
+    def depth(self):
+        return self._depth
+
+
+class TestAutoscaler:
+    def test_config_validation(self):
+        with pytest.raises(ValueError, match="min_replicas"):
+            AutoscalerConfig(min_replicas=0)
+        with pytest.raises(ValueError, match="max_replicas"):
+            AutoscalerConfig(min_replicas=2, max_replicas=1)
+        with pytest.raises(ValueError, match="scale_down_depth"):
+            AutoscalerConfig(scale_up_depth=1.0, scale_down_depth=2.0)
+
+    def test_rejoins_fault_evicted_after_delay(self, cfg, params):
+        pool = ReplicaPool(cfg, params, n_replicas=2, metrics=ServeMetrics())
+        try:
+            scaler = Autoscaler(
+                pool, _FakeQueue(), AutoscalerConfig(rejoin_delay_s=0.1)
+            )
+            pool.evict(1, reason="test")
+            scaler.poll_once()  # dwell not elapsed yet
+            assert not pool.replicas[1].alive
+            time.sleep(0.12)
+            scaler.poll_once()
+            assert pool.replicas[1].alive
+            assert [e.action for e in scaler.events] == ["rejoin"]
+        finally:
+            pool.shutdown()
+
+    def test_retired_replicas_stay_down(self, cfg, params):
+        pool = ReplicaPool(cfg, params, n_replicas=2, metrics=ServeMetrics())
+        try:
+            scaler = Autoscaler(
+                pool, _FakeQueue(), AutoscalerConfig(rejoin_delay_s=0.0)
+            )
+            pool.retire(1)
+            scaler.poll_once()
+            assert not pool.replicas[1].alive
+            assert scaler.events == []
+        finally:
+            pool.shutdown()
+
+    def test_scale_up_revives_retired_slot_under_load(self, cfg, params):
+        pool = ReplicaPool(cfg, params, n_replicas=2, metrics=ServeMetrics())
+        try:
+            queue = _FakeQueue(depth=0)
+            scaler = Autoscaler(
+                pool, queue,
+                AutoscalerConfig(scale_up_depth=4.0, cooldown_s=0.0),
+            )
+            pool.retire(1)
+            queue._depth = 8  # 8 deep on 1 alive replica -> scale up
+            scaler.poll_once()
+            assert pool.replicas[1].alive and not pool.replicas[1].retired
+            assert [e.action for e in scaler.events] == ["scale_up"]
+        finally:
+            pool.shutdown()
+
+    def test_scale_down_after_sustained_shallow(self, cfg, params):
+        pool = ReplicaPool(cfg, params, n_replicas=2, metrics=ServeMetrics())
+        try:
+            scaler = Autoscaler(
+                pool, _FakeQueue(depth=0),
+                AutoscalerConfig(
+                    scale_down_ticks=3, min_replicas=1, cooldown_s=0.0
+                ),
+            )
+            scaler.poll_once()
+            scaler.poll_once()
+            assert len(pool.alive_replicas()) == 2  # not sustained yet
+            scaler.poll_once()
+            assert len(pool.alive_replicas()) == 1
+            assert pool.replicas[1].retired  # highest id goes first
+            # min_replicas floor holds no matter how long the queue is idle
+            for _ in range(5):
+                scaler.poll_once()
+            assert len(pool.alive_replicas()) == 1
+            assert [e.action for e in scaler.events] == ["scale_down"]
+        finally:
+            pool.shutdown()
+
+    def test_max_replicas_none_caps_at_slot_count(self, cfg, params):
+        pool = ReplicaPool(cfg, params, n_replicas=1, metrics=ServeMetrics())
+        try:
+            scaler = Autoscaler(
+                pool, _FakeQueue(depth=100),
+                AutoscalerConfig(scale_up_depth=1.0, cooldown_s=0.0),
+            )
+            scaler.poll_once()
+            assert len(pool.replicas) == 1  # no new slots without max_replicas
+            scaler.config = AutoscalerConfig(
+                scale_up_depth=1.0, cooldown_s=0.0, max_replicas=2
+            )
+            scaler.poll_once()
+            assert len(pool.replicas) == 2
+        finally:
+            pool.shutdown()
+
+
+# -- integration: kill -> rejoin -> recovery ----------------------------------
+
+
+class TestKillRejoinRecovery:
+    def test_chaos_kill_recovers_and_completes_everything(self, cfg, params):
+        """Replica 1 is killed mid-trace; the autoscaler rejoins it warm and
+        every submitted request still completes exactly once."""
+        rt = _runtime(
+            cfg, params,
+            n_replicas=2,
+            autoscaler=AutoscalerConfig(
+                poll_interval_s=0.02, rejoin_delay_s=0.05, cooldown_s=60.0
+            ),
+        )
+        rt.warmup()
+        chaos = ChaosInjector([Fault(replica_id=1, at_batch=1, kind="kill")])
+        chaos.attach(rt.pool)
+        clouds = _clouds(24, seed=11)
+        with rt:
+            futs = [rt.submit(c, slo=DEFAULT) for c in clouds]
+            outs = [f.result(timeout=WAIT_S) for f in futs]
+            # hold the runtime open until the rejoin lands
+            deadline = time.monotonic() + WAIT_S
+            while rt.metrics.rejoins < 1 and time.monotonic() < deadline:
+                time.sleep(0.02)
+        assert all(o.shape == (cfg.n_classes,) for o in outs)
+        assert len(chaos.fired("kill")) == 1
+        snap = rt.metrics.snapshot()
+        assert snap.evictions >= 1
+        assert snap.rejoins >= 1
+        # exactly-once completion: every submit completed, none doubled
+        assert snap.submitted == snap.completed == len(clouds)
+        assert sum(b.n_real for b in rt.metrics.batch_records) == len(clouds)
+        rejoined = [e for e in rt.autoscaler.events if e.action == "rejoin"]
+        assert [e.replica_id for e in rejoined] == [1]
+
+    def test_wedge_trips_heartbeat_then_rejoin(self, cfg, params):
+        """A wedged worker thread is detected by the liveness monitor (not
+        by the injector) and the autoscaler still brings the slot back."""
+        rt = _runtime(
+            cfg, params,
+            n_replicas=2,
+            heartbeat_timeout_s=0.25,
+            autoscaler=AutoscalerConfig(poll_interval_s=0.02, rejoin_delay_s=0.05),
+        )
+        rt.warmup()
+        ChaosInjector(
+            [Fault(replica_id=0, at_batch=0, kind="wedge", duration_s=1.0)]
+        ).attach(rt.pool)
+        clouds = _clouds(8, seed=13)
+        with rt:
+            futs = [rt.submit(c) for c in clouds]
+            outs = [f.result(timeout=WAIT_S) for f in futs]
+            deadline = time.monotonic() + WAIT_S
+            while rt.metrics.rejoins < 1 and time.monotonic() < deadline:
+                time.sleep(0.02)
+        assert all(o.shape == (cfg.n_classes,) for o in outs)
+        snap = rt.metrics.snapshot()
+        assert snap.evictions >= 1
+        assert snap.rejoins >= 1
+        assert snap.completed == len(clouds)
+
+
+# -- runtime-level class isolation --------------------------------------------
+
+
+class TestRuntimeClassIsolation:
+    def test_mixed_class_traffic_completes_with_breakdown(self, cfg, params):
+        rt = _runtime(cfg, params)
+        clouds = _clouds(8, seed=17)
+        with rt:
+            futs = [
+                rt.submit(c, slo=INTERACTIVE if i % 2 else BULK, timeout_s=WAIT_S)
+                for i, c in enumerate(clouds)
+            ]
+            outs = [f.result(timeout=WAIT_S) for f in futs]
+        assert all(o.shape == (cfg.n_classes,) for o in outs)
+        snap = rt.metrics.snapshot()
+        assert snap.for_class("interactive").completed == 4
+        assert snap.for_class("bulk").completed == 4
+        assert snap.for_class("interactive").latency_p95_s > 0
+
+    def test_class_deadline_default_applies(self, cfg, params):
+        """A class deadline is inherited when submit passes no timeout —
+        an already-expired class deadline expires the request."""
+        tight = SLOClass("tight", priority=5, deadline_s=0.0, sheddable=False)
+        rt = _runtime(cfg, params, max_wait_s=0.2)
+        with rt:
+            fut = rt.submit(_clouds(1)[0], slo=tight)
+            with pytest.raises(Exception):  # noqa: B017 — DeadlineExceeded
+                fut.result(timeout=WAIT_S)
+        snap = rt.metrics.snapshot()
+        assert snap.for_class("tight").expired == 1
+
+    def test_interleaved_submitters_threads(self, cfg, params):
+        """Concurrent submitters on different classes: everything completes
+        and per-class counts add up (no cross-class leakage)."""
+        rt = _runtime(cfg, params)
+        clouds = _clouds(6, seed=23)
+        results = {}
+        errors = []
+
+        def client(name, slo):
+            try:
+                futs = [rt.submit(c, slo=slo, timeout_s=WAIT_S) for c in clouds]
+                results[name] = [f.result(timeout=WAIT_S) for f in futs]
+            except Exception as e:  # noqa: BLE001 — surfaced via assertion
+                errors.append(e)
+
+        with rt:
+            threads = [
+                threading.Thread(target=client, args=("hi", INTERACTIVE)),
+                threading.Thread(target=client, args=("lo", BULK)),
+            ]
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join(timeout=WAIT_S)
+        assert not errors
+        assert len(results["hi"]) == len(results["lo"]) == len(clouds)
+        snap = rt.metrics.snapshot()
+        assert snap.for_class("interactive").completed == len(clouds)
+        assert snap.for_class("bulk").completed == len(clouds)
