@@ -1,0 +1,226 @@
+"""Observability overhead benchmark: tracing-on vs tracing-off throughput.
+
+The tracing layer's contract is "off is free, on is cheap": every
+instrumentation site is a single None-check when tracing is off, and one
+small append under an uncontended lock when it is on.  This benchmark holds
+the layer to that contract on the serve_load open-loop trace: the SAME
+arrival schedule is fired at a runtime with tracing off and one with
+tracing fully on (sample=1.0, periodic reporter attached), interleaved
+best-of-N so host drift lands on both sides, and the run RAISES (failing
+the CI bench-smoke lane) unless
+
+  * tracing-on throughput >= 0.97x tracing-off (the <= 3% overhead budget),
+  * every traced request span is well-formed — exactly one terminal event,
+    monotonic timestamps (`repro.serve.obs.trace_problems`),
+  * the per-request stage breakdown sums to the measured e2e latency within
+    tolerance (median unattributed residual <= 25% of e2e), and
+  * the run exports a Chrome-trace JSON that round-trips through `json`
+    with the same per-request stage sums — the artifact an operator would
+    actually load into Perfetto.
+
+Rows (printed by benchmarks/run.py as name,us_per_call,derived):
+  obs/tracing_{off,on} : us = p95 latency; note = throughput + trace volume.
+  obs/overhead         : note = on/off throughput ratio + budget.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.serve_load import BUCKETS, _make_clouds, _open_loop
+
+MAX_BATCH = 4
+MIN_RATIO = 0.97  # tracing-on must keep >= 97% of tracing-off throughput
+MAX_RESIDUAL_FRAC = 0.25  # median unattributed residual vs e2e
+
+
+def _measure(cfg, params, clouds, arrivals, rt_cfg):
+    """One open-loop rep against a fresh runtime; returns (thr, p95, rt)."""
+    from repro.serve import ServingRuntime
+
+    rt = ServingRuntime(cfg, params, rt_cfg)
+    rt.warmup()
+    with rt:
+        lat, _rej, wall = _open_loop(rt.submit, clouds, arrivals)
+    thr = len(lat) / wall if wall > 0 else 0.0
+    p95 = float(np.percentile(lat, 95)) if lat else float("nan")
+    return thr, p95, rt
+
+
+def _check_trace_quality(rt, n_requests):
+    """Assert span well-formedness + stage-sum-vs-e2e on one traced runtime."""
+    from repro.serve import request_timelines, trace_problems
+
+    events = rt.tracer.events()
+    problems = trace_problems(events)
+    if problems:
+        raise RuntimeError(f"obs_overhead: malformed traces: {problems[:5]}")
+    timelines = request_timelines(events)
+    if len(timelines) != n_requests:
+        raise RuntimeError(
+            f"obs_overhead: {len(timelines)} spans for {n_requests} requests"
+        )
+    completed = [tl for tl in timelines.values() if tl.completed]
+    if not completed:
+        raise RuntimeError("obs_overhead: no completed spans to attribute")
+    fracs = [tl.residual_s / tl.e2e_s for tl in completed if tl.e2e_s > 0]
+    med = float(np.median(fracs))
+    if med > MAX_RESIDUAL_FRAC:
+        raise RuntimeError(
+            f"obs_overhead: median unattributed residual {med:.1%} of e2e "
+            f"exceeds {MAX_RESIDUAL_FRAC:.0%} — stage edges drifted"
+        )
+    return events, med
+
+
+def _check_export(events):
+    """Export Chrome-trace JSON; re-validate stage sums from the file itself."""
+    from repro.serve import write_chrome_trace
+
+    fd, path = tempfile.mkstemp(suffix=".json", prefix="pc2im_trace_")
+    os.close(fd)
+    try:
+        n = write_chrome_trace(path, events)
+        doc = json.loads(open(path).read())
+        if len(doc["traceEvents"]) != n:
+            raise RuntimeError("obs_overhead: export round-trip lost events")
+        # per-request "X" slices carry their stage breakdown in args; the
+        # stages must sum to the slice duration within tolerance — checked
+        # from the FILE, since that is what an operator loads into Perfetto
+        checked = 0
+        for ev in doc["traceEvents"]:
+            if ev.get("ph") != "X" or ev.get("pid") != 1:
+                continue
+            stages = {
+                k: v for k, v in ev.get("args", {}).items() if k != "batch_id"
+            }
+            if not stages or ev["dur"] <= 0:
+                continue
+            frac = abs(ev["dur"] - sum(stages.values()) * 1e6) / ev["dur"]
+            if frac > MAX_RESIDUAL_FRAC + 0.10:  # per-request, laxer than median
+                raise RuntimeError(
+                    f"obs_overhead: exported slice stage sum off by {frac:.1%}"
+                )
+            checked += 1
+        if checked == 0:
+            raise RuntimeError("obs_overhead: export contains no request slices")
+        return n
+    finally:
+        os.unlink(path)
+
+
+def run(smoke: bool = False, seed: int = 0) -> list[dict]:
+    """Tracing-on vs tracing-off on the serve_load open-loop trace.
+
+    Interleaved best-of-N reps, retried up to 3 times before the throughput
+    budget raises (a single descheduled batch on a shared host moves an
+    open-loop throughput by more than the 3% budget under test); the trace
+    well-formedness and export checks are deterministic and assert on every
+    attempt.
+    """
+    import jax
+
+    from repro.configs.base import get_config
+    from repro.core.accelerator import get_accelerator
+    from repro.serve import RuntimeConfig, TraceConfig
+
+    cfg = get_config("pointnet2-cls", smoke=True)
+    width = 3 + cfg.in_features
+    accel = get_accelerator(cfg)
+    params = accel.init(jax.random.PRNGKey(seed))
+
+    n_requests = 48 if smoke else 96
+    n_reps = 5
+    clouds = _make_clouds(n_requests, width, seed)
+
+    # calibrate offered load to THIS host: per-request service time through
+    # the fused B=MAX_BATCH artifact (min of 5 — stable vs scheduler noise),
+    # then offer 2x that capacity so throughput is server-bound and any
+    # per-request tracing cost must surface in it
+    warm = np.zeros((MAX_BATCH, max(BUCKETS), width), np.float32)
+    jax.block_until_ready(accel.infer(params, warm))
+    times = []
+    for _ in range(5):
+        t = time.perf_counter()
+        jax.block_until_ready(accel.infer(params, warm))
+        times.append(time.perf_counter() - t)
+    s_req = min(times) / MAX_BATCH
+    rate = 2.0 / s_req
+
+    def rt_cfg(trace):
+        return RuntimeConfig(
+            max_batch=MAX_BATCH,
+            max_wait_s=min(0.02, 4 * s_req * MAX_BATCH),
+            max_queue=max(64, n_requests),
+            buckets=BUCKETS,
+            trace=trace,
+            # the reporter thread is part of the measured "tracing on" cost
+            report_interval_s=0.25 if trace is not None else None,
+        )
+
+    configs = (("off", None), ("on", TraceConfig(sample=1.0)))
+    last_err = None
+    for attempt in range(3):
+        rng = np.random.default_rng(seed + 31 * attempt)
+        arrivals_by_rep = [
+            np.cumsum(rng.exponential(1.0 / rate, size=n_requests))
+            for _ in range(n_reps)
+        ]
+        best = {}  # tag -> (thr, p95)
+        traced_rt = None
+        for arrivals in arrivals_by_rep:
+            # off/on interleave inside each rep: drift lands on both sides
+            for tag, trace in configs:
+                thr, p95, rt = _measure(cfg, params, clouds, arrivals, rt_cfg(trace))
+                if tag not in best or thr > best[tag][0]:
+                    best[tag] = (thr, p95)
+                    if tag == "on":
+                        traced_rt = rt
+
+        # deterministic span/export contracts: asserted on every attempt
+        events, residual_med = _check_trace_quality(traced_rt, n_requests)
+        n_exported = _check_export(events)
+
+        ratio = best["on"][0] / best["off"][0] if best["off"][0] else 0.0
+        if ratio >= MIN_RATIO:
+            break
+        last_err = RuntimeError(
+            f"obs_overhead: tracing-on throughput {best['on'][0]:.1f}/s is "
+            f"{ratio:.3f}x tracing-off {best['off'][0]:.1f}/s "
+            f"(budget {MIN_RATIO}x)"
+        )
+    else:
+        raise last_err
+
+    tracer = traced_rt.tracer
+    rows = []
+    for tag, _ in configs:
+        thr, p95 = best[tag]
+        extra = ""
+        if tag == "on":
+            extra = (
+                f" events={tracer.emitted} dropped={tracer.dropped}"
+                f" residual_med={residual_med:.1%} exported={n_exported}"
+            )
+        rows.append({
+            "name": f"obs/tracing_{tag}",
+            "us": p95 * 1e6,
+            "note": (
+                f"{thr:.1f} req/s best-of-{n_reps} (rate {rate:.1f}/s;"
+                f" p95 {p95 * 1e3:.1f}ms){extra}"
+            ),
+        })
+    rows.append({
+        "name": "obs/overhead",
+        "us": float("nan"),
+        "note": (
+            f"on/off throughput {ratio:.3f}x >= {MIN_RATIO}x budget;"
+            f" attempt {attempt + 1}/3"
+        ),
+    })
+    return rows

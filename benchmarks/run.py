@@ -166,6 +166,18 @@ def serve_slo_bench(smoke: bool = False) -> list[dict]:
     return serve_load.run_slo(smoke=smoke)
 
 
+def obs_overhead_bench(smoke: bool = False) -> list[dict]:
+    """Tracing-on vs tracing-off throughput on the serve_load open-loop trace
+    (see benchmarks/obs_overhead.py).  ASSERTS tracing-on keeps >= 97% of
+    tracing-off throughput, every span is well-formed (exactly one terminal,
+    monotonic), the stage breakdown sums to the measured e2e latency, and
+    the Chrome-trace JSON export round-trips — failures raise and fail the
+    lane."""
+    from benchmarks import obs_overhead
+
+    return obs_overhead.run(smoke=smoke)
+
+
 def _print_rows(rows: list) -> None:
     """Print wall-clock rows as name,us,note CSV (one place for the format)."""
     import math
@@ -188,16 +200,20 @@ def main() -> None:
     if smoke:
         # CI lane: the serving-runtime load benchmark, the correlated-sweep
         # preprocess-cache benchmark (asserting hit-rate > 0 and bitwise
-        # parity vs the uncached path), the pipelined-overlap lane + the SLO
+        # parity vs the uncached path), the pipelined-overlap lane, the SLO
         # control-plane lane (two-class overload trace with a mid-run replica
         # kill, asserting shed isolation, the interactive p95 budget and warm
-        # rejoin recovery), reduced size — keeps the open-loop path, the
-        # cache hot path, the stage-overlap speedup and the control plane
-        # exercised on every push without the full paper-table sweep.
+        # rejoin recovery) + the observability-overhead lane (tracing-on vs
+        # tracing-off, asserting the <= 3% throughput budget and span/export
+        # well-formedness), reduced size — keeps the open-loop path, the
+        # cache hot path, the stage-overlap speedup, the control plane and
+        # the tracing layer exercised on every push without the full
+        # paper-table sweep.
         _print_rows(serve_bench(smoke=True))
         _print_rows(serve_cache_bench(smoke=True))
         _print_rows(pipeline_bench(smoke=True))
         _print_rows(serve_slo_bench(smoke=True))
+        _print_rows(obs_overhead_bench(smoke=True))
         return
     for mod_name, kwargs in [
         ("benchmarks.fig12b_preproc_energy", {}),
@@ -223,6 +239,7 @@ def main() -> None:
     _print_rows(serve_cache_bench())
     _print_rows(pipeline_bench())
     _print_rows(serve_slo_bench())
+    _print_rows(obs_overhead_bench())
 
 
 if __name__ == "__main__":

@@ -10,9 +10,11 @@ cache: content-addressed duplicate clouds skip the preprocess stage and
 enter the feature stage directly.  The SLO control plane sits on top:
 `slo` (service classes with priority/deadline/shed policy), `autoscaler`
 (replica rejoin + queue-depth scaling) and `chaos` (deterministic fault
-injection for recovery tests).  `pointcloud` / `step` are the synchronous
-per-batch serve functions.  See docs/ARCHITECTURE.md for the dataflow
-diagram.
+injection for recovery tests).  `trace` / `obs` are the observability
+layer: a ring-buffered lifecycle tracer every component reports into, and
+the reductions/exporters (stage breakdown, Chrome-trace JSON, Prometheus
+text) built on it.  `pointcloud` / `step` are the synchronous per-batch
+serve functions.  See docs/ARCHITECTURE.md for the dataflow diagram.
 """
 
 from repro.serve.autoscaler import Autoscaler, AutoscalerConfig, ScaleEvent  # noqa: F401
@@ -47,7 +49,28 @@ from repro.serve.queue import (  # noqa: F401
     Request,
     Shed,
 )
+from repro.serve.obs import (  # noqa: F401
+    BatchCheck,
+    Reporter,
+    RequestTimeline,
+    STAGES,
+    StageBreakdown,
+    batch_crosscheck,
+    prometheus_text,
+    request_timelines,
+    stage_breakdown,
+    to_chrome_trace,
+    trace_problems,
+    write_chrome_trace,
+)
 from repro.serve.slo import BULK, DEFAULT, INTERACTIVE, SLOClass  # noqa: F401
+from repro.serve.trace import (  # noqa: F401
+    EVENTS,
+    TERMINAL_EVENTS,
+    TraceConfig,
+    TraceEvent,
+    Tracer,
+)
 from repro.serve.runtime import (  # noqa: F401
     RuntimeConfig,
     ServingRuntime,

@@ -81,10 +81,12 @@ class Autoscaler:
     `poll_once()` without starting the thread.
     """
 
-    def __init__(self, pool, queue, config: AutoscalerConfig | None = None):
+    def __init__(self, pool, queue, config: AutoscalerConfig | None = None,
+                 *, tracer=None):
         self.pool = pool
         self.queue = queue
         self.config = config or AutoscalerConfig()
+        self.tracer = tracer  # Tracer | None — scale actions fold into the trace
         self.events: list[ScaleEvent] = []
         self._lock = threading.Lock()
         self._stop = threading.Event()
@@ -117,9 +119,23 @@ class Autoscaler:
 
     # -- one control step -----------------------------------------------------
 
+    # trace-event names per action, literal so the registry scan sees them
+    _TRACE_EVENTS = {
+        "rejoin": "scale.rejoin",
+        "scale_up": "scale.up",
+        "scale_down": "scale.down",
+        "error": "scale.error",
+    }
+
     def _record(self, action: str, rid: int, depth: int) -> None:
         with self._lock:
             self.events.append(ScaleEvent(action, rid, depth, time.monotonic()))
+        if self.tracer is not None:
+            self.tracer.emit(
+                self._TRACE_EVENTS[action],
+                replica_id=rid,
+                args={"depth": depth},
+            )
 
     def poll_once(self) -> None:
         """One control step: rejoin the dead, then scale on queue depth.

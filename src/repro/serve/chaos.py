@@ -127,6 +127,17 @@ class ChaosInjector:
                 )
         if fault is None:
             return
+        tracer = getattr(pool, "tracer", None)
+        if tracer is not None:
+            # literal names so the closed-registry scan sees them
+            name = {"kill": "chaos.kill", "wedge": "chaos.wedge",
+                    "slow": "chaos.slow"}[fault.kind]
+            tracer.emit(
+                name,
+                replica_id=rep.id,
+                batch_id=getattr(mb, "batch_id", -1),
+                args={"batch_index": index, "duration_s": fault.duration_s},
+            )
         if fault.kind == "kill":
             # eviction re-dispatches every in-flight batch (including this
             # one); the abort below must then NOT retry it again — the

@@ -187,6 +187,7 @@ class ReplicaPool:
         metrics: ServeMetrics | None = None,
         cache=None,
         stage_top_k: int = 8,
+        tracer=None,
     ):
         devices = list(devices) if devices is not None else jax.devices()
         n = n_replicas if n_replicas is not None else len(devices)
@@ -197,6 +198,7 @@ class ReplicaPool:
         self.metrics = metrics or ServeMetrics()
         self.cache = cache  # PreprocessCache | None — pre-staged on rejoin
         self.stage_top_k = stage_top_k
+        self.tracer = tracer  # Tracer | None — None means tracing is off
         self.chaos = None  # serve/chaos.py injector hook (tests/benchmarks)
         self._params = params  # host reference: rejoin re-pins a fresh copy
         self._devices = devices
@@ -231,8 +233,34 @@ class ReplicaPool:
             rid,
             self._devices[rid % len(self._devices)],
             self._params,
-            on_straggler=self.metrics.record_straggler,
+            # bind the slot id here: StragglerEvent itself carries no replica
+            # attribution, and the monitor is per-replica anyway
+            on_straggler=lambda ev, rid=rid: self._on_straggler(rid, ev),
         )
+
+    def _on_straggler(self, rid: int, ev) -> None:
+        """Per-replica straggler beat: metrics attribution + trace event."""
+        self.metrics.record_straggler(ev, replica_id=rid)
+        if self.tracer is not None:
+            self.tracer.emit(
+                "replica.straggler",
+                replica_id=rid,
+                args={
+                    "duration_s": ev.duration_s,
+                    "median_s": ev.median_s,
+                    "ratio": ev.ratio,
+                },
+            )
+
+    def _emit(self, name: str, mb, rep_id: int = -1, args: dict | None = None):
+        """Emit one batch-scoped trace event (no-op when untraced).
+
+        Warmup batches carry batch_id == -1 and stay invisible to the trace
+        stream, matching their exclusion from metrics.
+        """
+        tr = self.tracer
+        if tr is not None and mb.batch_id != -1:
+            tr.emit(name, batch_id=mb.batch_id, replica_id=rep_id, args=args)
 
     def _start_liveness(self, rep: Replica) -> None:
         """Attach heartbeat monitors + pumps to one replica (when enabled)."""
@@ -292,11 +320,19 @@ class ReplicaPool:
             orphans = list(rep.inflight.values())
             rep.inflight.clear()
         self.metrics.record_eviction()
+        if self.tracer is not None:
+            self.tracer.emit(
+                "replica.evicted",
+                replica_id=rid,
+                args={"reason": reason, "orphans": len(orphans)},
+            )
         rep.shutdown()
         for entry in orphans:
             if entry.future.done():
                 continue
             self.metrics.record_retry()
+            self._emit("batch.retry", entry.mb, rep_id=rid,
+                       args={"attempts": entry.attempts + 1, "reason": reason})
             self._dispatch(
                 entry.mb, entry.future, entry.attempts + 1,
                 entry.tried | {rid},
@@ -352,6 +388,10 @@ class ReplicaPool:
             rep.alive = True
         self._start_liveness(rep)
         self.metrics.record_rejoin()
+        if self.tracer is not None:
+            self.tracer.emit(
+                "replica.rejoin", replica_id=rid, args={"warm": warm}
+            )
         return True
 
     def add_replica(self, *, warm: bool = True) -> int:
@@ -379,6 +419,10 @@ class ReplicaPool:
             rep.alive = True
         self._start_liveness(rep)
         self.metrics.record_rejoin()
+        if self.tracer is not None:
+            self.tracer.emit(
+                "replica.rejoin", replica_id=rid, args={"warm": warm, "grew": True}
+            )
         return rid
 
     def _stage_cache(self, rep: Replica) -> None:
@@ -470,6 +514,8 @@ class ReplicaPool:
         if lost_race:
             self._retry(entry, rep.id, NoReplicaAvailable("replica died"))
             return
+        self._emit("batch.dispatched", mb, rep_id=rep.id,
+                   args={"attempts": attempts})
         try:
             rep.submit(self._execute, rep, entry)
         except RuntimeError as e:  # executor shut down between pick and submit
@@ -482,6 +528,8 @@ class ReplicaPool:
         if entry.future.done():
             return
         self.metrics.record_retry()
+        self._emit("batch.retry", entry.mb, rep_id=rid,
+                   args={"attempts": entry.attempts + 1, "reason": repr(err)})
         self._dispatch(entry.mb, entry.future, entry.attempts + 1,
                        entry.tried | {rid}, error=err)
 
@@ -515,9 +563,11 @@ class ReplicaPool:
             if mb.cache is not None:
                 logits, skipped = self._run_cached(accel, rep, mb, batch)
             else:
+                self._emit("batch.execute_start", mb, rep_id=rep.id)
                 logits = np.asarray(
                     jax.block_until_ready(accel.infer(rep.params, batch))
                 )
+                self._emit("batch.execute_end", mb, rep_id=rep.id)
                 skipped = False
             dt = rep.straggler.step_end(rep.n_batches)
             if rep.heartbeat is not None:
@@ -568,6 +618,16 @@ class ReplicaPool:
             self.metrics.record_cache_lookup(True, hits)
         if misses:
             self.metrics.record_cache_lookup(False, misses)
+        if self.tracer is not None and mb.batch_id != -1:
+            for req, ent in zip(mb.requests, entries):
+                if req.trace_id is not None and req.cache_key is not None:
+                    self.tracer.emit(
+                        "request.cache_lookup",
+                        trace_id=req.trace_id,
+                        batch_id=mb.batch_id,
+                        slo=req.slo.name,
+                        args={"hit": ent is not None},
+                    )
         return tuple(entries)
 
     def _run_cached(self, accel, rep, mb, batch):
@@ -595,6 +655,7 @@ class ReplicaPool:
             )
             jax.block_until_ready(fused)
             return logits, False
+        self._emit("batch.cache_start", mb, rep_id=rep.id)
         entries = self._resolve_entries(mb)
         n_hits = sum(1 for e in entries if e is not None)
         if n_hits == mb.n_real:
@@ -609,24 +670,42 @@ class ReplicaPool:
                     result_stack([e.pre for e in entries], total=mb.batch.shape[0]),
                     rep.device,
                 )
+            self._emit("batch.cache_end", mb, rep_id=rep.id,
+                       args={"hits": n_hits, "skip": True})
+            self._emit("batch.feature_start", mb, rep_id=rep.id)
             logits = np.asarray(
                 jax.block_until_ready(
                     accel.feature_from_cached(rep.params, batch, pre)
                 )
             )
+            self._emit("batch.feature_end", mb, rep_id=rep.id)
             return logits, True
+        self._emit("batch.cache_end", mb, rep_id=rep.id, args={"hits": n_hits})
         if n_hits == 0:
+            self._emit("batch.execute_start", mb, rep_id=rep.id)
             logits_dev, pre = accel.infer_with_preprocess(rep.params, batch)
             logits = np.asarray(jax.block_until_ready(logits_dev))
+            self._emit("batch.execute_end", mb, rep_id=rep.id)
             self._insert_executor.submit(self._insert_misses, mb, pre, entries)
             return logits, False
+        # mixed: block on the preprocess result explicitly (result_to_host is
+        # a no-op copy on the already-host tree inside _cached_splice), so the
+        # preprocess span measures the stage compute and the splice span only
+        # the host row surgery + cache fill
+        self._emit("batch.preprocess_start", mb, rep_id=rep.id)
+        pre_host = result_to_host(accel.preprocess_stage(batch))
+        self._emit("batch.preprocess_end", mb, rep_id=rep.id)
+        self._emit("batch.splice_start", mb, rep_id=rep.id)
         pre = jax.device_put(
-            self._cached_splice(mb, accel.preprocess_stage(batch), entries),
+            self._cached_splice(mb, pre_host, entries),
             rep.device,
         )
+        self._emit("batch.splice_end", mb, rep_id=rep.id)
+        self._emit("batch.feature_start", mb, rep_id=rep.id)
         logits = np.asarray(
             jax.block_until_ready(accel.feature_stage(rep.params, batch, pre))
         )
+        self._emit("batch.feature_end", mb, rep_id=rep.id)
         return logits, False
 
     def _splice_or_insert(self, rep, mb, pre, entries):
@@ -715,6 +794,7 @@ class ReplicaPool:
                 replica_id=rep.id,
                 duration_s=dt,
                 preprocess_skipped=preprocess_skipped,
+                batch_id=getattr(mb, "batch_id", -1),
             ))
 
     def _execute_pipelined(self, rep: Replica, entry: _Entry):
@@ -744,6 +824,7 @@ class ReplicaPool:
                     # one batch ahead of the feature thread, so late hits from
                     # the immediately preceding batch's insert may still miss
                     # — correctness is unaffected, only the skip opportunity
+                    self._emit("batch.cache_start", mb, rep_id=rep.id)
                     entries = self._resolve_entries(mb)
                 if mb.n_real > 0 and entries and all(e is not None for e in entries):
                     # cache skip composes with the pipeline: the worker hands
@@ -759,9 +840,18 @@ class ReplicaPool:
                             ),
                             rep.device,
                         )
+                    self._emit("batch.cache_end", mb, rep_id=rep.id,
+                               args={"skip": True})
                     skipped = True
                 else:
+                    if mb.cache is not None:
+                        self._emit("batch.cache_end", mb, rep_id=rep.id)
+                    # async — the span measures the dispatch only; the stage's
+                    # device time is charged to the feature span through the
+                    # data dependency (block_until_ready)
+                    self._emit("batch.preprocess_start", mb, rep_id=rep.id)
                     pre = accel.preprocess_stage(batch)  # async — hand off, don't block
+                    self._emit("batch.preprocess_end", mb, rep_id=rep.id)
                     skipped = False
                 if rep.heartbeat is not None:
                     rep.heartbeat.beat()
@@ -808,11 +898,18 @@ class ReplicaPool:
                         # thread (blocks on the preprocess result through
                         # the transfer, same data dependency); all-miss
                         # batches keep the device tree + async insert
+                        mixed = any(e is not None for e in entries)
+                        if mixed:
+                            self._emit("batch.splice_start", mb, rep_id=rep.id)
                         pre = self._splice_or_insert(rep, mb, pre, entries)
+                        if mixed:
+                            self._emit("batch.splice_end", mb, rep_id=rep.id)
                     feature = accel.feature_stage
+                self._emit("batch.feature_start", mb, rep_id=rep.id)
                 logits = np.asarray(
                     jax.block_until_ready(feature(rep.params, batch, pre))
                 )
+                self._emit("batch.feature_end", mb, rep_id=rep.id)
                 dt = time.monotonic() - t0
                 if rep.feature_heartbeat is not None:
                     rep.feature_heartbeat.beat()

@@ -31,6 +31,7 @@ class BatchRecord:
     replica_id: int
     duration_s: float
     preprocess_skipped: bool = False  # all-hit batch: entered the feature stage directly
+    batch_id: int = -1  # trace span id of the micro-batch (-1 when tracing is off)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -50,6 +51,7 @@ class ClassSnapshot:
     rejected: int
     latency_p50_s: float
     latency_p95_s: float
+    depth_hwm: int = 0  # max depth this class's admission lane ever reached
 
     def format_row(self) -> str:
         """One-line human summary of this class (serve_slo prints these)."""
@@ -96,6 +98,12 @@ class MetricsSnapshot:
     shed: int = 0  # requests load-shed (admission Shed + full-queue eviction)
     rejoins: int = 0  # replicas re-admitted to the pool (warm rejoin / scale-up)
     per_class: tuple[ClassSnapshot, ...] = ()  # per-SLO-class breakdown
+    # true high-water marks, updated at every admission / dispatch (the
+    # *_mean/_max fields above are point samples taken at scheduler drains
+    # and miss bursts between drains)
+    queue_depth_hwm: int = 0  # max total queued depth ever observed
+    inflight_hwm: int = 0  # max concurrently-inflight micro-batches
+    stragglers_by_replica: tuple[tuple[int, int], ...] = ()  # (replica_id, count)
 
     @property
     def cache_hit_rate(self) -> float:
@@ -134,7 +142,15 @@ class MetricsSnapshot:
 class _ClassStats:
     """Mutable per-SLO-class tallies inside ServeMetrics (lock owned there)."""
 
-    __slots__ = ("submitted", "completed", "shed", "expired", "rejected", "latencies")
+    __slots__ = (
+        "submitted",
+        "completed",
+        "shed",
+        "expired",
+        "rejected",
+        "latencies",
+        "depth_hwm",
+    )
 
     def __init__(self):
         self.submitted = 0
@@ -143,6 +159,7 @@ class _ClassStats:
         self.expired = 0
         self.rejected = 0
         self.latencies: list[float] = []
+        self.depth_hwm = 0
 
 
 class ServeMetrics:
@@ -167,6 +184,9 @@ class ServeMetrics:
         self.straggler_events = 0
         self.cache_hits = 0
         self.cache_misses = 0
+        self.queue_depth_hwm = 0
+        self.inflight_hwm = 0
+        self._straggler_by_replica: dict[int, int] = {}
         self._latencies: list[float] = []
         self._depths: list[int] = []
         self._batches: list[BatchRecord] = []
@@ -226,10 +246,42 @@ class ServeMetrics:
         with self._lock:
             self.rejoins += 1
 
-    def record_straggler(self, _event=None):
-        """Count one straggler event (slow-but-alive replica batch)."""
+    def record_straggler(self, event=None, replica_id: int | None = None):
+        """Count one straggler event (slow-but-alive replica batch).
+
+        `event` is the StragglerMonitor's StragglerEvent (duration/median/
+        ratio); `replica_id` attributes it to the replica whose monitor
+        fired, feeding the `stragglers_by_replica` snapshot breakdown.
+        """
+        del event  # durations flow to the trace stream (ReplicaPool hook)
         with self._lock:
             self.straggler_events += 1
+            if replica_id is not None:
+                self._straggler_by_replica[replica_id] = (
+                    self._straggler_by_replica.get(replica_id, 0) + 1
+                )
+
+    def record_queue_hwm(self, depth: int, slo_name: str | None = None,
+                         class_depth: int | None = None):
+        """Raise the queue-depth high-water marks after one admission.
+
+        Called by the admission queue with the post-append total depth and
+        the admitted request's lane depth — unlike record_queue_depth this
+        sees every enqueue, so bursts between scheduler drains register.
+        """
+        with self._lock:
+            if depth > self.queue_depth_hwm:
+                self.queue_depth_hwm = depth
+            if class_depth is not None:
+                cls = self._cls(slo_name)
+                if class_depth > cls.depth_hwm:
+                    cls.depth_hwm = class_depth
+
+    def record_inflight(self, n: int):
+        """Raise the inflight-micro-batch high-water mark after a dispatch."""
+        with self._lock:
+            if n > self.inflight_hwm:
+                self.inflight_hwm = n
 
     def record_cache_lookup(self, hit: bool, n: int = 1):
         """Count n preprocess-cache probes resolved at batch execution."""
@@ -327,6 +379,7 @@ class ServeMetrics:
                     rejected=cls.rejected,
                     latency_p50_s=cp50,
                     latency_p95_s=cp95,
+                    depth_hwm=cls.depth_hwm,
                 ))
             return MetricsSnapshot(
                 submitted=self.submitted,
@@ -352,4 +405,9 @@ class ServeMetrics:
                 shed=self.shed,
                 rejoins=self.rejoins,
                 per_class=tuple(per_class),
+                queue_depth_hwm=self.queue_depth_hwm,
+                inflight_hwm=self.inflight_hwm,
+                stragglers_by_replica=tuple(
+                    sorted(self._straggler_by_replica.items())
+                ),
             )

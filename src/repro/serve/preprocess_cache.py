@@ -133,10 +133,11 @@ class PreprocessCache:
     the introspection surface benchmarks and tests assert on.
     """
 
-    def __init__(self, config: CacheConfig | None = None):
+    def __init__(self, config: CacheConfig | None = None, *, tracer=None):
         self.config = config or CacheConfig()
         if self.config.max_bytes < 0:
             raise ValueError(f"max_bytes must be >= 0, got {self.config.max_bytes}")
+        self.tracer = tracer  # Tracer | None — insert/evict churn events
         self._lock = threading.Lock()
         self._entries: OrderedDict[tuple, CacheEntry] = OrderedDict()
         self._bytes = 0
@@ -198,6 +199,7 @@ class PreprocessCache:
         None).  Evicts least-recently-hit entries until the budget holds.
         """
         entry = CacheEntry(key, row, pre)
+        n_evicted = 0
         with self._lock:
             if entry.nbytes > self.config.max_bytes:
                 self._oversize += 1
@@ -212,6 +214,19 @@ class PreprocessCache:
                 _, evicted = self._entries.popitem(last=False)
                 self._bytes -= evicted.nbytes
                 self._evictions += 1
+                n_evicted += 1
+            resident = self._bytes
+        # emit outside the cache lock: the tracer has its own
+        if self.tracer is not None:
+            self.tracer.emit(
+                "cache.insert",
+                args={"nbytes": entry.nbytes, "resident": resident},
+            )
+            if n_evicted:
+                self.tracer.emit(
+                    "cache.evict",
+                    args={"n": n_evicted, "reason": "budget"},
+                )
         return entry
 
     def top_entries(self, k: int) -> list[CacheEntry]:
@@ -235,11 +250,12 @@ class PreprocessCache:
         """Explicitly drop one entry; True if it was resident."""
         with self._lock:
             entry = self._entries.pop(key, None)
-            if entry is None:
-                return False
-            self._bytes -= entry.nbytes
-            self._evictions += 1
-            return True
+            if entry is not None:
+                self._bytes -= entry.nbytes
+                self._evictions += 1
+        if entry is not None and self.tracer is not None:
+            self.tracer.emit("cache.evict", args={"n": 1, "reason": "explicit"})
+        return entry is not None
 
     def clear(self) -> None:
         """Drop every entry (counters keep their history)."""

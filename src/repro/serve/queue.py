@@ -35,6 +35,7 @@ import numpy as np
 
 from repro.core.policy import ExecutionPolicy
 from repro.serve.slo import DEFAULT, SLOClass, drain_key
+from repro.serve.trace import Tracer
 
 
 def try_set_result(future: Future, result) -> bool:
@@ -129,6 +130,7 @@ class Request:
     fitted: np.ndarray | None = None  # (bucket, 3 + F) pad_cloud row
     cache_key: tuple | None = None  # PreprocessCache.key_for address
     slo: SLOClass = DEFAULT  # service class: priority, deadline, shed policy
+    trace_id: int | None = None  # span id from Tracer.new_trace; None = untraced
 
     @property
     def key(self) -> tuple:
@@ -165,6 +167,8 @@ class AdmissionQueue:
         *,
         shed_threshold: int | None = None,
         on_shed: Callable[[Request], None] | None = None,
+        metrics=None,
+        tracer: Tracer | None = None,
     ):
         if max_depth < 1:
             raise ValueError(f"max_depth must be >= 1, got {max_depth}")
@@ -175,6 +179,8 @@ class AdmissionQueue:
         self.max_depth = max_depth
         self.shed_threshold = shed_threshold
         self.on_shed = on_shed
+        self.metrics = metrics  # optional ServeMetrics: depth high-water marks
+        self.tracer = tracer
         self._lanes: dict[SLOClass, collections.deque[Request]] = {}
         self._depth = 0
         self._cond = threading.Condition()
@@ -210,6 +216,7 @@ class AdmissionQueue:
         fitted: np.ndarray | None = None,
         cache_key: tuple | None = None,
         slo: SLOClass | None = None,
+        trace_id: int | None = None,
     ) -> Future:
         """Admit one cloud; returns its future or raises AdmissionError.
 
@@ -237,6 +244,7 @@ class AdmissionQueue:
             fitted=fitted,
             cache_key=cache_key,
             slo=slo,
+            trace_id=trace_id,
         )
         victim = None
         with self._cond:
@@ -257,16 +265,36 @@ class AdmissionQueue:
                 if victim is None:
                     raise QueueFull(self._depth, self.max_depth)
             req.id = next(self._ids)
-            self._lanes.setdefault(slo, collections.deque()).append(req)
+            lane = self._lanes.setdefault(slo, collections.deque())
+            lane.append(req)
             self._depth += 1
+            depth_after, lane_after = self._depth, len(lane)
             self._cond.notify()
+        # outside the lock: metrics/tracer take their own locks, and future
+        # callbacks (and on_shed) may re-enter the queue
+        if self.metrics is not None:
+            self.metrics.record_queue_hwm(depth_after, slo.name, lane_after)
+        if self.tracer is not None and req.trace_id is not None:
+            self.tracer.emit("request.admitted", trace_id=req.trace_id, slo=slo.name)
+            self.tracer.emit(
+                "request.enqueued",
+                trace_id=req.trace_id,
+                slo=slo.name,
+                args={"lane_depth": lane_after, "depth": depth_after},
+            )
         if victim is not None:
-            # outside the lock: future callbacks (and on_shed) may re-enter
-            try_set_exception(
+            won = try_set_exception(
                 victim.future,
                 Shed(victim.slo.name, f"request {victim.id} evicted for "
                                       f"priority-{req.slo.priority} admission"),
             )
+            if won and self.tracer is not None and victim.trace_id is not None:
+                self.tracer.emit(
+                    "request.shed",
+                    trace_id=victim.trace_id,
+                    slo=victim.slo.name,
+                    args={"reason": "evicted"},
+                )
             if self.on_shed is not None:
                 self.on_shed(victim)
         return req.future

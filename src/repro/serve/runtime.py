@@ -37,10 +37,12 @@ from repro.serve.autoscaler import Autoscaler, AutoscalerConfig
 from repro.serve.dispatch import ReplicaPool
 from repro.serve.hashing import DEFAULT_QUANT_STEP
 from repro.serve.metrics import ServeMetrics
+from repro.serve.obs import Reporter
 from repro.serve.preprocess_cache import CacheConfig, PreprocessCache
 from repro.serve.queue import AdmissionError, AdmissionQueue, Shed
 from repro.serve.scheduler import BatchScheduler, MicroBatch, SchedulerConfig, bucket_for
 from repro.serve.slo import SLOClass
+from repro.serve.trace import TraceConfig, Tracer
 
 
 @dataclasses.dataclass(frozen=True)
@@ -74,6 +76,8 @@ class RuntimeConfig:
     cache_quant_step: float = DEFAULT_QUANT_STEP  # content-hash lattice pitch
     shed_threshold: int | None = None  # backlog shed budget (None disables)
     autoscaler: AutoscalerConfig | None = None  # None = no control loop
+    trace: TraceConfig | None = None  # None = tracing off (no tracer anywhere)
+    report_interval_s: float | None = None  # periodic metrics reporter (None = off)
 
 
 class ServingRuntime:
@@ -101,12 +105,18 @@ class ServingRuntime:
         self.default_policy = resolve_policy(model_cfg, policy)
         self.buckets = tuple(sorted(self.config.buckets or (model_cfg.n_points,)))
         self.metrics = ServeMetrics()
+        # constructed FIRST: every downstream component takes the tracer (or
+        # None — the single-branch off path) at construction
+        self.tracer = (
+            Tracer(self.config.trace) if self.config.trace is not None else None
+        )
         self.cache = (
             PreprocessCache(
                 CacheConfig(
                     max_bytes=self.config.cache_max_bytes,
                     quant_step=self.config.cache_quant_step,
-                )
+                ),
+                tracer=self.tracer,
             )
             if self.config.cache_max_bytes > 0
             else None
@@ -118,6 +128,8 @@ class ServingRuntime:
             # runtime's admission accounting — the callback keeps the shed
             # counter (and the victim's class breakdown) truthful
             on_shed=lambda req: self.metrics.record_shed(req.slo.name),
+            metrics=self.metrics,
+            tracer=self.tracer,
         )
         self.pool = ReplicaPool(
             model_cfg,
@@ -128,9 +140,11 @@ class ServingRuntime:
             max_retries=self.config.max_retries,
             metrics=self.metrics,
             cache=self.cache,
+            tracer=self.tracer,
         )
         self.autoscaler = (
-            Autoscaler(self.pool, self.queue, self.config.autoscaler)
+            Autoscaler(self.pool, self.queue, self.config.autoscaler,
+                       tracer=self.tracer)
             if self.config.autoscaler is not None
             else None
         )
@@ -150,6 +164,13 @@ class ServingRuntime:
             ),
             metrics=self.metrics,
             cache=self.cache,
+            tracer=self.tracer,
+        )
+        self.reporter = (
+            Reporter(self.metrics, self.config.report_interval_s,
+                     tracer=self.tracer)
+            if self.config.report_interval_s is not None
+            else None
         )
         self._started = False
         self._stopped = False
@@ -170,6 +191,8 @@ class ServingRuntime:
             self.scheduler.start()
             if self.autoscaler is not None:
                 self.autoscaler.start()
+            if self.reporter is not None:
+                self.reporter.start()
         return self
 
     def stop(self, drain: bool = True):
@@ -180,6 +203,8 @@ class ServingRuntime:
         than left hanging — without a scheduler nothing could complete it.
         """
         self._stopped = True
+        if self.reporter is not None:
+            self.reporter.stop()
         if self.autoscaler is not None:
             # stopped before the scheduler: a rejoin racing shutdown would
             # spin up a fresh replica the pool.shutdown() below never sees
@@ -265,6 +290,16 @@ class ServingRuntime:
             timeout_s = self.config.default_timeout_s
         bucket = bucket_for(cloud.shape[0], self.buckets)
         slo_name = slo.name if slo is not None else None
+        # every request gets its trace id HERE (head sampling decides once;
+        # None = untraced and no span event is ever emitted for it)
+        trace_id = self.tracer.new_trace() if self.tracer is not None else None
+        if trace_id is not None:
+            self.tracer.emit(
+                "request.submit",
+                trace_id=trace_id,
+                slo=slo_name or "default",
+                args={"n": int(cloud.shape[0]), "bucket": bucket},
+            )
         # cache probe material (bucket fit + content hash) is deliberately
         # NOT computed here: admission must stay O(1) per request on the
         # client thread, so the scheduler computes it at assembly, where it
@@ -276,12 +311,27 @@ class ServingRuntime:
                 policy=resolved,
                 timeout_s=timeout_s,
                 slo=slo,
+                trace_id=trace_id,
             )
         except Shed:
             self.metrics.record_shed(slo_name)
+            if trace_id is not None:
+                self.tracer.emit(
+                    "request.shed",
+                    trace_id=trace_id,
+                    slo=slo_name or "default",
+                    args={"reason": "admission"},
+                )
             raise
-        except AdmissionError:
+        except AdmissionError as e:
             self.metrics.record_rejected(slo_name)
+            if trace_id is not None:
+                self.tracer.emit(
+                    "request.rejected",
+                    trace_id=trace_id,
+                    slo=slo_name or "default",
+                    args={"reason": e.reason},
+                )
             raise
         self.metrics.record_submitted(slo_name)
         return fut

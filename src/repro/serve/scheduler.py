@@ -96,6 +96,7 @@ class MicroBatch:
     batch: np.ndarray  # (max_batch, bucket, 3 + F) float32, filler rows zero
     cache: object | None = None  # PreprocessCache, None = caching disabled
     cache_entries: tuple = ()  # per-request CacheEntry | None (when cache is set)
+    batch_id: int = -1  # trace span id (-1 = untraced, e.g. warmup batches)
 
     @property
     def n_real(self) -> int:
@@ -197,6 +198,7 @@ class BatchScheduler:
         config: SchedulerConfig | None = None,
         metrics: ServeMetrics | None = None,
         cache=None,
+        tracer=None,
     ):
         self.queue = queue
         self.dispatch_fn = dispatch_fn
@@ -206,6 +208,7 @@ class BatchScheduler:
         self.config = config or SchedulerConfig()
         self.metrics = metrics or ServeMetrics()
         self.cache = cache  # PreprocessCache | None — peeked at _dispatch
+        self.tracer = tracer  # Tracer | None — None means tracing is off
         self._pending: dict[tuple, list[Request]] = {}
         self._inflight: set = set()
         self._inflight_cond = threading.Condition()
@@ -284,6 +287,10 @@ class BatchScheduler:
     def _admit(self, reqs: Sequence[Request]):
         now = time.monotonic()
         for req in reqs:
+            if self.tracer is not None and req.trace_id is not None:
+                self.tracer.emit(
+                    "request.drained", trace_id=req.trace_id, slo=req.slo.name, t=now
+                )
             if req.future.done():  # client cancelled while queued
                 continue
             if req.expired(now):
@@ -296,6 +303,10 @@ class BatchScheduler:
             req.future, DeadlineExceeded(f"request {req.id} deadline passed")
         ):
             self.metrics.record_expired(req.slo.name)
+            if self.tracer is not None and req.trace_id is not None:
+                self.tracer.emit(
+                    "request.expired", trace_id=req.trace_id, slo=req.slo.name
+                )
 
     def _key_order(self, key: tuple) -> tuple:
         """Flush order of pending keys: higher-priority classes first."""
@@ -385,6 +396,15 @@ class BatchScheduler:
                     for req in live
                 ]
                 entries = tuple(probe)
+                if self.tracer is not None:
+                    for req, ent in zip(live, entries):
+                        if req.trace_id is not None:
+                            self.tracer.emit(
+                                "request.cache_peek",
+                                trace_id=req.trace_id,
+                                slo=req.slo.name,
+                                args={"hit": ent is not None},
+                            )
                 rows = [
                     ent.row if ent is not None else req.fitted
                     for req, ent in zip(live, entries)
@@ -395,7 +415,11 @@ class BatchScheduler:
         except Exception as e:  # noqa: BLE001 — one bad cloud fails ITS batch only
             self.metrics.record_failed(len(live))
             for req in live:
-                try_set_exception(req.future, e)
+                won = try_set_exception(req.future, e)
+                if won and self.tracer is not None and req.trace_id is not None:
+                    self.tracer.emit(
+                        "request.failed", trace_id=req.trace_id, slo=req.slo.name
+                    )
             return
         mb = MicroBatch(
             requests=tuple(live),
@@ -404,9 +428,32 @@ class BatchScheduler:
             batch=batch,
             cache=self.cache,
             cache_entries=entries,
+            batch_id=self.tracer.next_batch_id() if self.tracer is not None else -1,
         )
+        if self.tracer is not None:
+            self.tracer.emit(
+                "batch.assembled",
+                batch_id=mb.batch_id,
+                slo=_slo.name,
+                args={
+                    "members": [r.trace_id for r in live if r.trace_id is not None],
+                    "bucket": bucket,
+                    "n_real": mb.n_real,
+                    "n_hits": mb.n_hits,
+                },
+            )
+            for req in live:
+                if req.trace_id is not None:
+                    self.tracer.emit(
+                        "request.assembled",
+                        trace_id=req.trace_id,
+                        batch_id=mb.batch_id,
+                        slo=req.slo.name,
+                    )
         with self._inflight_cond:
             self._inflight.add(mb)
+            n_inflight = len(self._inflight)
+        self.metrics.record_inflight(n_inflight)
         fut = self.dispatch_fn(mb)
         fut.add_done_callback(lambda f, mb=mb: self._on_batch_done(mb, f))
 
@@ -415,8 +462,14 @@ class BatchScheduler:
             err = fut.exception()
             if err is not None:
                 self.metrics.record_failed(mb.n_real)
+                if self.tracer is not None and mb.batch_id != -1:
+                    self.tracer.emit("batch.failed", batch_id=mb.batch_id)
                 for req in mb.requests:
-                    try_set_exception(req.future, err)
+                    won = try_set_exception(req.future, err)
+                    if won and self.tracer is not None and req.trace_id is not None:
+                        self.tracer.emit(
+                            "request.failed", trace_id=req.trace_id, slo=req.slo.name
+                        )
                 return
             outs = scatter_results(self.task, fut.result(), mb)
             now = time.monotonic()
@@ -427,6 +480,18 @@ class BatchScheduler:
                     self._expire(req)
                 elif try_set_result(req.future, out):
                     self.metrics.record_completed(now - req.submit_t, req.slo.name)
+                    if self.tracer is not None and req.trace_id is not None:
+                        # same `now` as the latency metric: the trace e2e and
+                        # the recorded latency agree by construction
+                        self.tracer.emit(
+                            "request.completed",
+                            trace_id=req.trace_id,
+                            batch_id=mb.batch_id,
+                            slo=req.slo.name,
+                            t=now,
+                        )
+            if self.tracer is not None and mb.batch_id != -1:
+                self.tracer.emit("batch.completed", batch_id=mb.batch_id)
         finally:
             with self._inflight_cond:
                 self._inflight.discard(mb)
