@@ -166,6 +166,16 @@ def serve_slo_bench(smoke: bool = False) -> list[dict]:
     return serve_load.run_slo(smoke=smoke)
 
 
+def serve_shard_bench(smoke: bool = False) -> list[dict]:
+    """Mesh-sharded replicas vs 1-device replicas on a closed-loop trace
+    (see benchmarks/serve_load.run_shard).  Runs in a forced-host-device
+    subprocess and ASSERTS bitwise parity of every sharded response against
+    the single-device reference — a parity break fails the lane."""
+    from benchmarks import serve_load
+
+    return serve_load.run_shard(smoke=smoke)
+
+
 def obs_overhead_bench(smoke: bool = False) -> list[dict]:
     """Tracing-on vs tracing-off throughput on the serve_load open-loop trace
     (see benchmarks/obs_overhead.py).  ASSERTS tracing-on keeps >= 97% of
@@ -205,14 +215,17 @@ def main() -> None:
         # kill, asserting shed isolation, the interactive p95 budget and warm
         # rejoin recovery) + the observability-overhead lane (tracing-on vs
         # tracing-off, asserting the <= 3% throughput budget and span/export
-        # well-formedness), reduced size — keeps the open-loop path, the
-        # cache hot path, the stage-overlap speedup, the control plane and
-        # the tracing layer exercised on every push without the full
-        # paper-table sweep.
+        # well-formedness) + the sharded mesh-replica lane (forced-host-device
+        # subprocess asserting bitwise parity of sharded vs single-device
+        # responses), reduced size — keeps the open-loop path, the cache hot
+        # path, the stage-overlap speedup, the control plane, the tracing
+        # layer and the sharded dispatch path exercised on every push without
+        # the full paper-table sweep.
         _print_rows(serve_bench(smoke=True))
         _print_rows(serve_cache_bench(smoke=True))
         _print_rows(pipeline_bench(smoke=True))
         _print_rows(serve_slo_bench(smoke=True))
+        _print_rows(serve_shard_bench(smoke=True))
         _print_rows(obs_overhead_bench(smoke=True))
         return
     for mod_name, kwargs in [
@@ -239,6 +252,7 @@ def main() -> None:
     _print_rows(serve_cache_bench())
     _print_rows(pipeline_bench())
     _print_rows(serve_slo_bench())
+    _print_rows(serve_shard_bench())
     _print_rows(obs_overhead_bench())
 
 

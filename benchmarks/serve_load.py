@@ -673,3 +673,124 @@ def run_slo(smoke: bool = False, seed: int = 0) -> list[dict]:
             },
         ]
     raise RuntimeError(f"serve_slo: failed after 3 attempts: {last_err}")
+
+
+# -- sharded mesh-replica lane ------------------------------------------------
+
+# Child script for `run_shard`: runs under 4 FORCED host devices, which must
+# be configured via XLA_FLAGS before jax initialises its backend — hence a
+# subprocess, mirroring the tests/_multidev.py isolation rule.  Serves the
+# same closed-loop trace through 1-device replicas (unsharded baseline) and
+# 2-device mesh replicas in both sharding modes, self-asserting every
+# response is bitwise-equal to the single-device reference before reporting
+# any number (fp32 forward is batch-size independent bitwise, so B=1
+# references are exact).  Rows come back as JSON via PC2IM_SHARD_OUT.
+_SHARD_CHILD = """\
+import json, os, time
+
+import jax, numpy as np
+from repro.configs.base import get_config
+from repro.core.accelerator import get_accelerator
+from repro.core.policy import ExecutionPolicy
+from repro.serve import RuntimeConfig, ServingRuntime
+
+smoke = bool(int(os.environ["PC2IM_SHARD_SMOKE"]))
+seed = int(os.environ["PC2IM_SHARD_SEED"])
+n_requests = 24 if smoke else 64
+
+cfg = get_config("pointnet2-cls", smoke=True)
+width = 3 + cfg.in_features
+base = get_accelerator(cfg)
+params = base.init(jax.random.PRNGKey(seed))
+rng = np.random.default_rng(seed)
+clouds = [
+    rng.standard_normal((cfg.n_points, width)).astype(np.float32)
+    for _ in range(n_requests)
+]
+refs = [np.asarray(base.infer(params, c[None]))[0] for c in clouds]
+
+rows = []
+for mode in (None, "batch", "tensor"):
+    pol = ExecutionPolicy(sharding=mode)
+    per = 1 if mode is None else 2
+    rt = ServingRuntime(
+        cfg,
+        params,
+        RuntimeConfig(
+            max_batch=4, devices_per_replica=per, max_queue=max(64, n_requests)
+        ),
+        policy=pol,
+    )
+    rt.warmup((pol,))
+    lats, outs = [], []
+    t0 = time.perf_counter()
+    with rt:
+        futs = [(time.perf_counter(), rt.submit(c)) for c in clouds]
+        for t_sub, f in futs:
+            outs.append(f.result(timeout=600))
+            lats.append(time.perf_counter() - t_sub)
+    wall = time.perf_counter() - t0
+    for o, r in zip(outs, refs):
+        assert np.array_equal(o, r), (
+            f"serve_shard: sharding={mode} response != single-device bits"
+        )
+    n_rep = len(rt.pool.replicas)
+    tag = mode or "unsharded"
+    rows.append({
+        "name": f"serve_shard/{tag}",
+        "us": float(np.percentile(lats, 95)) * 1e6,
+        "note": (
+            f"{len(outs) / wall:.1f} req/s over {n_rep}x{per}-device replicas"
+            f" (forced host devices); parity bitwise-ok"
+        ),
+    })
+
+with open(os.environ["PC2IM_SHARD_OUT"], "w") as f:
+    json.dump(rows, f)
+"""
+
+
+def run_shard(smoke: bool = False, seed: int = 0) -> list[dict]:
+    """Mesh-sharded replica lane: 2-device replicas vs 1-device replicas.
+
+    Runs in a subprocess with ``xla_force_host_platform_device_count=4``
+    (the parent process must keep its single-device view) and SELF-ASSERTS
+    bitwise parity of every sharded response against the single-device
+    reference before any throughput number is reported — a parity break
+    fails the lane, not just a dashboard.
+
+    Forced host devices timeshare one CPU, so the throughput columns here
+    measure dispatch/overhead plumbing, not real multi-chip scaling.
+      serve_shard/{mode} : us = p95 latency; derived = throughput + parity.
+    """
+    import json
+    import os
+    import subprocess
+    import sys
+    import tempfile
+
+    repo_root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    with tempfile.TemporaryDirectory() as td:
+        out = os.path.join(td, "rows.json")
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        env["PYTHONPATH"] = "src"
+        env["PC2IM_SHARD_OUT"] = out
+        env["PC2IM_SHARD_SMOKE"] = str(int(smoke))
+        env["PC2IM_SHARD_SEED"] = str(seed)
+        res = subprocess.run(
+            [sys.executable, "-c", _SHARD_CHILD],
+            capture_output=True,
+            text=True,
+            timeout=1800,
+            env=env,
+            cwd=repo_root,
+        )
+        if res.returncode != 0:
+            raise RuntimeError(
+                f"serve_shard child failed (rc={res.returncode})\n"
+                f"--- stdout tail ---\n{res.stdout[-2000:]}\n"
+                f"--- stderr tail ---\n{res.stderr[-4000:]}"
+            )
+        with open(out) as f:
+            return json.load(f)

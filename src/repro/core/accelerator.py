@@ -31,10 +31,14 @@ import dataclasses
 import threading
 
 import jax
+from jax.experimental.shard_map import shard_map
 
 from repro.core.policy import ExecutionPolicy, resolve_policy
+from repro.launch.mesh import make_replica_mesh
 from repro.models import pointnet2 as PN
 from repro.parallel.pipeline import two_stage_schedule
+from repro.sharding.hints import REPLICA_AXIS
+from repro.sharding.policy import replica_specs
 
 
 class PC2IMAccelerator:
@@ -100,6 +104,12 @@ class PC2IMAccelerator:
         # PipelinedExecutor cache for infer_pipelined (keyed by devices/depth)
         self._executors: dict = {}
         self._executors_lock = threading.Lock()
+        # MeshArtifacts cache for sharded policies (keyed by device group):
+        # the global accelerator cache keys on (config, policy) only, but a
+        # sharded artifact is additionally pinned to ONE replica's mesh —
+        # same lazy per-devices pattern as the PipelinedExecutor cache above
+        self._mesh_artifacts: dict = {}
+        self._mesh_lock = threading.Lock()
 
     # -- artifacts -----------------------------------------------------------
 
@@ -195,6 +205,27 @@ class PC2IMAccelerator:
                 )
         return ex.run(params, batches)
 
+    def mesh_artifacts(self, devices) -> "MeshArtifacts":
+        """Sharded infer/forward artifacts over one replica's device group.
+
+        Requires a policy with `sharding` set (the mode picks the
+        shard_map body — see MeshArtifacts).  Artifacts are built lazily
+        and cached per device tuple, so a pool of mesh replicas sharing one
+        accelerator compiles each group's artifact exactly once and a
+        rejoined replica on the same group re-traces nothing.
+        """
+        if self.policy.sharding is None:
+            raise ValueError(
+                "mesh_artifacts needs a policy with sharding set; "
+                "use infer/forward for unsharded execution"
+            )
+        key = tuple(devices)
+        with self._mesh_lock:
+            arts = self._mesh_artifacts.get(key)
+            if arts is None:
+                arts = self._mesh_artifacts[key] = MeshArtifacts(self, key)
+        return arts
+
     def __repr__(self) -> str:
         return (
             f"PC2IMAccelerator({self.config.name}, quant={self.policy.quant!r}, "
@@ -282,22 +313,94 @@ class PipelinedExecutor:
         return two_stage_schedule(stage_a, stage_b, batches, depth=self.depth)
 
 
+class MeshArtifacts:
+    """Sharded whole-pipeline artifact of one accelerator over one device group.
+
+    The serving analog of the paper's split-concatenate engine spanning
+    subarrays: one replica owns a 1-D `Mesh` (launch.mesh.make_replica_mesh)
+    and the fused preprocess+feature composition runs under `shard_map`
+    with specs resolved by `sharding.policy.replica_specs`:
+
+      * "batch"  — every stage runs on its local batch rows; the only
+        cross-device term is the exact pmax globalizing the activation
+        quant scale (core.quant), so each row's math is untouched.
+      * "tensor" — preprocess runs batch-sharded, then the neighborhoods
+        are all-gathered and the feature MLPs column-split every weight
+        across the group, concatenating partial products (nn.linear's
+        tensor path); each device finally returns its row slice of the
+        replicated logits.
+
+    Both modes are bitwise-equal to the accelerator's single-device
+    `infer` on the same batch (pinned by tests/test_sharded_replica.py).
+    `check_rep=False` matches the repo's shard_map precedent
+    (parallel/pipeline.py) — the tensor mode's gathered intermediates are
+    replicated values the replication checker can't see through.
+    """
+
+    def __init__(self, accel: PC2IMAccelerator, devices):
+        self.mesh = make_replica_mesh(devices)
+        cfg, pol = accel.config, accel.policy
+        mode = pol.sharding
+        p_params, p_points, p_logits = replica_specs(mode)
+
+        def mapped(params, points):
+            pre = PN.preprocess_stage(cfg, points, policy=pol)
+            if mode == "batch":
+                return PN.feature_stage(params, cfg, points, pre, policy=pol)
+            # tensor: globalize the batch-sharded neighborhoods, run the
+            # feature stage replicated (its linears column-split across the
+            # group internally), then keep only this device's rows so the
+            # out_spec can reassemble the global batch
+            pts = jax.lax.all_gather(points, REPLICA_AXIS, axis=0, tiled=True)
+            pre = jax.tree.map(
+                lambda t: jax.lax.all_gather(t, REPLICA_AXIS, axis=0, tiled=True),
+                pre,
+            )
+            logits = PN.feature_stage(params, cfg, pts, pre, policy=pol)
+            idx = jax.lax.axis_index(REPLICA_AXIS)
+            rows = points.shape[0]
+            return jax.lax.dynamic_slice_in_dim(logits, idx * rows, rows, axis=0)
+
+        self._infer = jax.jit(
+            shard_map(
+                mapped,
+                mesh=self.mesh,
+                in_specs=(p_params, p_points),
+                out_specs=p_logits,
+                check_rep=False,
+            )
+        )
+
+    def infer(self, params, points: jax.Array) -> jax.Array:
+        """Sharded batched forward: (B, N, 3+F) -> logits, B % mesh.size == 0."""
+        if points.shape[0] % self.mesh.size != 0:
+            raise ValueError(
+                f"batch dim {points.shape[0]} must divide over the replica "
+                f"mesh of {self.mesh.size} device(s)"
+            )
+        return self._infer(params, points)
+
+    def forward(self, params, points: jax.Array) -> jax.Array:
+        """Alias of `infer` — same compiled artifact, training-style name."""
+        return self.infer(params, points)
+
+
 @dataclasses.dataclass(frozen=True)
 class CacheStats:
     """Snapshot of the accelerator cache (see `cache_stats`).
 
     hits/misses count `get_accelerator` calls; size is the number of live
     artifacts; keys names each artifact as (config.name, quant, backend,
-    pipeline) so tests and the serving runtime can assert
-    one-artifact-per-(config, policy) — pipelined and sequential traffic
-    resolve to DIFFERENT keys — and detect compile storms under concurrent
-    traffic.
+    pipeline, sharding) so tests and the serving runtime can assert
+    one-artifact-per-(config, policy) — pipelined vs sequential and sharded
+    vs unsharded traffic all resolve to DIFFERENT keys — and detect compile
+    storms under concurrent traffic.
     """
 
     hits: int
     misses: int
     size: int
-    keys: tuple[tuple[str, str, str | None, str], ...]
+    keys: tuple[tuple[str, str, str | None, str, str | None], ...]
 
 
 # Explicit dict cache (not lru_cache): the serving runtime calls
@@ -338,7 +441,8 @@ def cache_stats() -> CacheStats:
     """Introspect the accelerator cache (hit/miss counters + live keys)."""
     with _lock:
         keys = tuple(
-            (cfg.name, pol.quant, pol.backend, pol.pipeline) for cfg, pol in _artifacts
+            (cfg.name, pol.quant, pol.backend, pol.pipeline, pol.sharding)
+            for cfg, pol in _artifacts
         )
         return CacheStats(hits=_hits, misses=_misses, size=len(_artifacts), keys=keys)
 

@@ -35,6 +35,7 @@ import dataclasses
 
 QUANT_MODES = ("none", "sc_w16a16", "sc_w8a8")
 PIPELINE_MODES = ("sequential", "pipelined")
+SHARDING_MODES = (None, "batch", "tensor")
 _QUANT_BITS = {"sc_w16a16": 16, "sc_w8a8": 8}
 
 
@@ -63,9 +64,21 @@ class ExecutionPolicy:
                 policy's hash, so pipelined and sequential traffic resolve
                 to DIFFERENT cached artifacts and a serving micro-batch
                 never mixes schedules (see serve/scheduler.py).
-    precision / sharding : reserved knobs for later scaling PRs (matmul
-                precision, named sharding policies); carried now so the
-                policy's hash identity is stable when they land.
+    sharding  : mesh-sharded execution of the compiled artifact — None runs
+                single-device; "batch" shards the batch dim of BOTH stages
+                over the replica's device group; "tensor" batch-shards the
+                preprocess stage and column-splits every feature-MLP linear
+                across the group, concatenating the partial products (the
+                paper's split-concatenate dataflow lifted to a device mesh).
+                Participates in the policy's hash exactly like `pipeline`:
+                sharded and unsharded traffic resolve to DIFFERENT cached
+                artifacts.  The knob is inert outside a replica mesh — the
+                same policy object traces identically under plain jit —
+                and is mutually exclusive with pipeline="pipelined" (the
+                two-stage handoff would break the shard_map boundary).
+    precision : reserved knob for a later scaling PR (matmul precision);
+                carried now so the policy's hash identity is stable when it
+                lands.
     """
 
     quant: str = "none"
@@ -85,6 +98,15 @@ class ExecutionPolicy:
         if self.pipeline not in PIPELINE_MODES:
             raise ValueError(
                 f"pipeline must be one of {PIPELINE_MODES}, got {self.pipeline!r}"
+            )
+        if self.sharding not in SHARDING_MODES:
+            raise ValueError(
+                f"sharding must be one of {SHARDING_MODES}, got {self.sharding!r}"
+            )
+        if self.sharding is not None and self.pipeline == "pipelined":
+            raise ValueError(
+                "sharding and pipeline='pipelined' are mutually exclusive: "
+                "the two-stage handoff would split the shard_map boundary"
             )
 
     @property

@@ -39,13 +39,23 @@ class Quantized(NamedTuple):
     scale: jax.Array  # per-tensor (or per-channel) float scale
 
 
-def quantize_symmetric(x: jax.Array, bits: int = 16, axis=None) -> Quantized:
-    """Symmetric signed quantization: q = round(x / s), s = max|x| / (2^(b-1)-1)."""
+def quantize_symmetric(
+    x: jax.Array, bits: int = 16, axis=None, *, axis_name: str | None = None
+) -> Quantized:
+    """Symmetric signed quantization: q = round(x / s), s = max|x| / (2^(b-1)-1).
+
+    axis_name: optional mapped mesh axis (shard_map) to pmax the amax over,
+    so every shard quantizes with the GLOBAL scale.  max is exact under
+    pmax, which is what keeps a batch-sharded quantized linear bitwise-equal
+    to its unsharded trace.
+    """
     qmax = (1 << (bits - 1)) - 1
     if axis is None:
         amax = jnp.max(jnp.abs(x))
     else:
         amax = jnp.max(jnp.abs(x), axis=axis, keepdims=True)
+    if axis_name is not None:
+        amax = jax.lax.pmax(amax, axis_name)
     scale = jnp.maximum(amax, 1e-12) / qmax
     q = jnp.clip(jnp.round(x / scale), -qmax - 1, qmax).astype(jnp.int32)
     return Quantized(q=q, scale=scale)

@@ -47,10 +47,16 @@ def sc_quantized_linear(
     bits: int = 16,
     backend: str = "auto",
     interpret: bool | None = None,
+    amax_axis: str | None = None,
 ) -> jax.Array:
-    """W16A16 linear: float (..., K) x (K, N) -> float32 (..., N)."""
+    """W16A16 linear: float (..., K) x (K, N) -> float32 (..., N).
+
+    amax_axis: mapped mesh axis to globalize the ACTIVATION scale over
+    (shard_map batch sharding) — the weight is replicated, so its local
+    amax already equals the global one.
+    """
     lead = x.shape[:-1]
-    xq = quantize_symmetric(x.reshape(-1, x.shape[-1]), bits)
+    xq = quantize_symmetric(x.reshape(-1, x.shape[-1]), bits, axis_name=amax_axis)
     wq = quantize_symmetric(w, bits)
     y = sc_matmul_op(xq.q, wq.q, bits=bits, backend=backend, interpret=interpret)
     y = y * (xq.scale * wq.scale)

@@ -9,6 +9,9 @@ single real CPU device.
 from __future__ import annotations
 
 import jax
+import numpy as np
+
+from repro.sharding.hints import REPLICA_AXIS
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -24,3 +27,40 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_host_mesh():
     """Degenerate 1x1 mesh on the real local device (tests/examples)."""
     return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def make_replica_mesh(devices):
+    """1-D serving mesh over ONE replica's device group.
+
+    The single axis is `sharding.hints.REPLICA_AXIS`; the accelerator's
+    sharded artifacts shard_map over it (specs from
+    sharding.policy.replica_specs).  A one-device group is valid and yields
+    a degenerate size-1 mesh — the sharded artifact then runs unsharded on
+    that device, so policy semantics don't depend on group size.
+    """
+    devices = tuple(devices)
+    if not devices:
+        raise ValueError("replica mesh needs at least one device")
+    return jax.sharding.Mesh(np.array(devices), (REPLICA_AXIS,))
+
+
+def carve_device_groups(devices, per_replica: int) -> list[tuple]:
+    """Partition a device list into consecutive groups of `per_replica`.
+
+    The serving pool's unit of capacity: each group backs one mesh-sharded
+    replica (per_replica=1 reproduces the classic one-device-per-replica
+    carving).  Leftover devices that don't fill a whole group are unused —
+    a partial mesh would change the shard count and retrace every sharded
+    artifact, so uniform groups win.  Raises when per_replica < 1 or
+    exceeds the device count (no group could be formed).
+    """
+    devices = list(devices)
+    if per_replica < 1:
+        raise ValueError(f"devices_per_replica must be >= 1, got {per_replica}")
+    if per_replica > len(devices):
+        raise ValueError(
+            f"devices_per_replica={per_replica} exceeds the "
+            f"{len(devices)} available device(s)"
+        )
+    n = len(devices) // per_replica
+    return [tuple(devices[i * per_replica : (i + 1) * per_replica]) for i in range(n)]

@@ -21,7 +21,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.policy import ExecutionPolicy
-from repro.kernels.sc_matmul.ops import sc_quantized_linear
+from repro.core.quant import quantize_symmetric
+from repro.kernels.sc_matmul.ops import sc_matmul_op, sc_quantized_linear
+from repro.sharding.hints import REPLICA_AXIS, replica_axis_active
 
 
 @contextlib.contextmanager
@@ -65,9 +67,68 @@ def linear_init(key, d_in: int, d_out: int, *, bias: bool = True, scale: float |
     return p
 
 
+def _shard_mode(policy: ExecutionPolicy | None) -> str | None:
+    """The policy's sharding mode, but ONLY inside a mapped replica mesh.
+
+    Outside `shard_map` over REPLICA_AXIS the axis is unbound and every
+    sharded code path deactivates, so a sharded policy traces identically
+    to its unsharded twin under plain jit — the knob selects a different
+    cached artifact, never different single-device math.
+    """
+    mode = getattr(policy, "sharding", None) if policy is not None else None
+    if mode is None:
+        return None
+    return mode if replica_axis_active() else None
+
+
+def _linear_tensor_sharded(p, x: jax.Array, policy: ExecutionPolicy) -> jax.Array:
+    """Column-split linear across the replica mesh (split-concatenate).
+
+    Each device multiplies against its slice of the weight columns and the
+    partial products are concatenated with a tiled all_gather — the paper's
+    SC dataflow lifted to a device group.  Bitwise-equal to the replicated
+    linear: fp32 columns are independent; the quantized path quantizes the
+    FULL weight first (global per-tensor scale) and slices the integer
+    planes, whose matmul is exact, so column subsets match the unsharded
+    product exactly.  N is zero-padded up to a multiple of the group size;
+    the pad columns are dropped after the gather.
+    """
+    w = p["w"]
+    k, n = w.shape
+    group = int(jax.core.axis_frame(REPLICA_AXIS))  # static axis size
+    idx = jax.lax.axis_index(REPLICA_AXIS)
+    cols = -(-n // group)  # ceil: last shard may hold zero-pad columns
+    bits = policy.quant_bits
+    if bits is None:
+        wp = jnp.pad(w, ((0, 0), (0, cols * group - n)))
+        wl = jax.lax.dynamic_slice_in_dim(wp, idx * cols, cols, axis=1)
+        y = x @ wl
+    else:
+        lead = x.shape[:-1]
+        xq = quantize_symmetric(x.reshape(-1, k), bits)
+        wq = quantize_symmetric(w, bits)  # full-tensor scale: replicated, global
+        wqp = jnp.pad(wq.q, ((0, 0), (0, cols * group - n)))
+        wl = jax.lax.dynamic_slice_in_dim(wqp, idx * cols, cols, axis=1)
+        y = sc_matmul_op(
+            xq.q, wl, bits=bits,
+            backend=policy.resolved_backend(), interpret=policy.interpret,
+        )
+        y = (y * (xq.scale * wq.scale)).reshape(lead + (cols,)).astype(x.dtype)
+    y = jax.lax.all_gather(y, REPLICA_AXIS, axis=-1, tiled=True)[..., :n]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
 def linear(p, x: jax.Array, policy: ExecutionPolicy | None = None) -> jax.Array:
     """Dense layer.  policy=None or policy.quant="none": float matmul;
-    otherwise the SC-CIM integer path via the kernel registry."""
+    otherwise the SC-CIM integer path via the kernel registry.  Under an
+    active replica mesh (accelerator sharded artifacts), policy.sharding
+    routes to the split-concatenate column sharding ("tensor") or
+    globalizes the activation quant scale over the batch shards ("batch")."""
+    mode = _shard_mode(policy)
+    if mode == "tensor":
+        return _linear_tensor_sharded(p, x, policy)
     bits = None if policy is None else policy.quant_bits
     if bits is None:
         y = x @ p["w"]
@@ -75,6 +136,7 @@ def linear(p, x: jax.Array, policy: ExecutionPolicy | None = None) -> jax.Array:
         y = sc_quantized_linear(
             x, p["w"], bits=bits,
             backend=policy.resolved_backend(), interpret=policy.interpret,
+            amax_axis=REPLICA_AXIS if mode == "batch" else None,
         ).astype(x.dtype)
     if "b" in p:
         y = y + p["b"]

@@ -1,9 +1,14 @@
-"""Replica pool — one accelerator replica per device, least-loaded dispatch.
+"""Replica pool — one accelerator replica per device GROUP, least-loaded dispatch.
 
-Each `Replica` pins a copy of the model parameters to one `jax.devices()`
-entry and executes micro-batches on its own single worker thread, so B
-replicas give B-way compute overlap while every batch still runs on exactly
-one device.  Health is delegated to `runtime/fault_tolerance.py`:
+Each `Replica` pins a copy of the model parameters to one carved group of
+`jax.devices()` entries (usually of size one — `devices_per_replica`) and
+executes micro-batches on its own single worker thread, so B replicas give
+B-way compute overlap while every batch still runs on exactly one group.
+Batches under a sharded `ExecutionPolicy` run the accelerator's shard_map
+artifact across the group's mesh (`_execute_sharded`); everything else —
+dispatch, warmup, heartbeat/wedge eviction, chaos injection, retry,
+tracing — is group-size-agnostic.  Health is delegated to
+`runtime/fault_tolerance.py`:
 
   * HeartbeatMonitor — a pump thread feeds a no-op beat through each of the
     replica's executor queues every timeout/4 (worker AND feature thread,
@@ -49,6 +54,7 @@ from repro.core.engine import (
     result_stack,
     result_to_host,
 )
+from repro.launch.mesh import carve_device_groups, make_replica_mesh
 from repro.runtime.fault_tolerance import HeartbeatMonitor, StragglerMonitor
 from repro.serve.metrics import BatchRecord, ServeMetrics
 from repro.serve.queue import try_set_exception, try_set_result
@@ -70,7 +76,15 @@ class _Entry:
 
 
 class Replica:
-    """One device-pinned executor: params copy + single worker thread.
+    """One device-group-pinned executor: params copy + single worker thread.
+
+    The unit of capacity is a device GROUP (usually of size one): sharded-
+    policy batches run the accelerator's shard_map artifact over the
+    group's 1-D mesh against `mesh_params` (a replicated pin), while
+    unsharded batches keep using the primary device's `params` copy —
+    both pins coexist so one replica serves both kinds of traffic (the
+    replicated pin aliases the primary one for 1-device groups; sharding
+    the tensor-mode weights in MEMORY too is a ROADMAP follow-on).
 
     Batches under a `pipeline="pipelined"` policy additionally use a second
     single-thread executor: the worker thread dispatches the preprocess
@@ -84,8 +98,21 @@ class Replica:
 
     def __init__(self, rid: int, device, params, *, on_straggler=None):
         self.id = rid
-        self.device = device
-        self.params = jax.device_put(params, device)
+        # one device OR a device group (mesh-sharded replica): normalized to
+        # a tuple, with `device` the group's primary — every single-device
+        # path (batch placement, cache staging, repr) keeps using it, so a
+        # 1-device group behaves exactly like the classic replica
+        self.devices = tuple(device) if isinstance(device, (tuple, list)) else (device,)
+        self.device = self.devices[0]
+        self.params = jax.device_put(params, self.device)
+        # replicated pin over the group's mesh for sharded-policy batches.
+        # For a 1-device group the mesh sharding is equivalent to the
+        # primary pin, so device_put aliases the copy above (no duplicate)
+        self.mesh = make_replica_mesh(self.devices)
+        self.mesh_params = jax.device_put(
+            self.params,
+            jax.sharding.NamedSharding(self.mesh, jax.sharding.PartitionSpec()),
+        )
         self.alive = True
         self.retired = False  # scale-down (don't auto-rejoin) vs fault eviction
         self.evicted_t: float | None = None  # when evict() ran (rejoin delay base)
@@ -182,6 +209,7 @@ class ReplicaPool:
         *,
         n_replicas: int | None = None,
         devices=None,
+        devices_per_replica: int = 1,
         heartbeat_timeout_s: float | None = None,
         max_retries: int = 2,
         metrics: ServeMetrics | None = None,
@@ -190,7 +218,11 @@ class ReplicaPool:
         tracer=None,
     ):
         devices = list(devices) if devices is not None else jax.devices()
-        n = n_replicas if n_replicas is not None else len(devices)
+        # the unit of capacity is a device GROUP: per_replica=1 reproduces
+        # the classic per-device carving; > 1 backs each replica with a mesh
+        # (leftover devices that don't fill a group are unused)
+        self._groups = carve_device_groups(devices, devices_per_replica)
+        n = n_replicas if n_replicas is not None else len(self._groups)
         if n < 1:
             raise ValueError("need at least one replica")
         self.model_cfg = model_cfg
@@ -224,14 +256,16 @@ class ReplicaPool:
         """Construct one fresh Replica for slot `rid` (params re-pinned).
 
         Shared by the constructor and `rejoin`/`add_replica`: the replica's
-        device follows the slot (round-robin over the pool's devices), so a
-        rejoined replica lands back on the device its predecessor used.
-        Liveness pumps are NOT started here — call `_start_liveness` after
-        the replica is visible in `self.replicas`.
+        device group follows the slot (round-robin over the carved groups),
+        so a rejoined replica lands back on the group its predecessor used —
+        and, for sharded policies, on the exact mesh whose artifacts the
+        accelerator already compiled (warm re-trace).  Liveness pumps are
+        NOT started here — call `_start_liveness` after the replica is
+        visible in `self.replicas`.
         """
         return Replica(
             rid,
-            self._devices[rid % len(self._devices)],
+            self._groups[rid % len(self._groups)],
             self._params,
             # bind the slot id here: StragglerEvent itself carries no replica
             # attribution, and the monitor is per-replica anyway
@@ -553,6 +587,9 @@ class ReplicaPool:
                 if was_inflight:
                     self._retry(entry, rep.id, e)
                 return
+        if getattr(mb.policy, "sharding", None) is not None:
+            self._execute_sharded(rep, entry)
+            return
         if getattr(mb.policy, "pipeline", "sequential") == "pipelined":
             self._execute_pipelined(rep, entry)
             return
@@ -580,6 +617,40 @@ class ReplicaPool:
             with self._lock:
                 was_inflight = rep.inflight.pop(entry.seq, None) is not None
             if was_inflight:
+                self._retry(entry, rep.id, e)
+
+    def _execute_sharded(self, rep: Replica, entry: _Entry):
+        """Mesh-sharded execution of one batch over the replica's device group.
+
+        Routes through the accelerator's `mesh_artifacts` for this group —
+        a 1-device group gets a degenerate mesh, so the policy's semantics
+        never depend on the pool's carving.  Straggler tracking, heartbeat
+        beats, retry-on-failure and trace spans behave exactly like the
+        sequential path (chaos already ran in `_execute`).  The preprocess
+        cache deliberately does not compose with sharded policies yet —
+        the scheduler never attaches it to a sharded batch (cached rows
+        are single-device host trees, not mesh-laid-out ones; see ROADMAP).
+        """
+        mb = entry.mb
+        try:
+            accel = get_accelerator(self.model_cfg, mb.policy)
+            arts = accel.mesh_artifacts(rep.devices)
+            rep.straggler.step_start()
+            self._emit("batch.execute_start", mb, rep_id=rep.id)
+            logits = np.asarray(
+                jax.block_until_ready(
+                    arts.infer(rep.mesh_params, jnp.asarray(mb.batch))
+                )
+            )
+            self._emit("batch.execute_end", mb, rep_id=rep.id)
+            dt = rep.straggler.step_end(rep.n_batches)
+            if rep.heartbeat is not None:
+                rep.heartbeat.beat()
+            self._record_success(rep, entry, logits, dt)
+        except Exception as e:  # noqa: BLE001 — any device/kernel failure
+            with self._lock:
+                was_inflight = rep.inflight.pop(entry.seq, None) is not None
+            if was_inflight:  # else a concurrent evict() already re-dispatched
                 self._retry(entry, rep.id, e)
 
     # -- preprocess-cache execution -------------------------------------------
@@ -788,7 +859,12 @@ class ReplicaPool:
         if try_set_result(entry.future, logits):
             self.metrics.record_batch(BatchRecord(
                 bucket=mb.bucket,
-                policy_key=(mb.policy.quant, mb.policy.backend, mb.policy.pipeline),
+                policy_key=(
+                    mb.policy.quant,
+                    mb.policy.backend,
+                    mb.policy.pipeline,
+                    getattr(mb.policy, "sharding", None),
+                ),
                 n_real=mb.n_real,
                 batch_size=mb.batch.shape[0],
                 replica_id=rep.id,

@@ -25,7 +25,7 @@ class BatchRecord:
     """One executed micro-batch (who ran it, how full it was)."""
 
     bucket: int  # static n_points shape the batch was padded to
-    policy_key: tuple  # (quant, backend, pipeline) of the batch's ExecutionPolicy
+    policy_key: tuple  # (quant, backend, pipeline, sharding) of the batch's ExecutionPolicy
     n_real: int  # real requests in the batch (rest is filler)
     batch_size: int  # static batch dim
     replica_id: int

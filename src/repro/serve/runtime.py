@@ -68,7 +68,12 @@ class RuntimeConfig:
     max_wait_s: float = 0.005
     max_queue: int = 256
     buckets: tuple[int, ...] | None = None
-    n_replicas: int | None = None  # None -> one per jax.devices() entry
+    n_replicas: int | None = None  # None -> one per carved device group
+    # devices per replica: 1 (default) is the classic one-device replica;
+    # > 1 carves jax.devices() into groups and each replica becomes a mesh
+    # over its group — sharded ExecutionPolicy batches split across it
+    # (must divide max_batch so sharded batches split evenly)
+    devices_per_replica: int = 1
     heartbeat_timeout_s: float | None = None
     max_retries: int = 2
     default_timeout_s: float | None = None  # per-request deadline default
@@ -102,6 +107,15 @@ class ServingRuntime:
     ):
         self.model_cfg = model_cfg
         self.config = config or RuntimeConfig()
+        if self.config.devices_per_replica < 1:
+            raise ValueError("devices_per_replica must be >= 1")
+        if self.config.max_batch % self.config.devices_per_replica != 0:
+            # sharded batches split the static batch dim over the group; a
+            # non-dividing group would need padding the mesh axis per batch
+            raise ValueError(
+                f"max_batch={self.config.max_batch} must be divisible by "
+                f"devices_per_replica={self.config.devices_per_replica}"
+            )
         self.default_policy = resolve_policy(model_cfg, policy)
         self.buckets = tuple(sorted(self.config.buckets or (model_cfg.n_points,)))
         self.metrics = ServeMetrics()
@@ -136,6 +150,7 @@ class ServingRuntime:
             params,
             n_replicas=self.config.n_replicas,
             devices=devices,
+            devices_per_replica=self.config.devices_per_replica,
             heartbeat_timeout_s=self.config.heartbeat_timeout_s,
             max_retries=self.config.max_retries,
             metrics=self.metrics,
@@ -244,7 +259,8 @@ class ServingRuntime:
                     bucket=bucket,
                     policy=resolved,
                     batch=np.zeros((self.config.max_batch, bucket, width), np.float32),
-                    cache=self.cache,
+                    # sharded batches never carry the cache (scheduler parity)
+                    cache=self.cache if resolved.sharding is None else None,
                 )
                 self.pool.warmup(mb)
         return self
@@ -353,7 +369,7 @@ class ServingRuntime:
         return (
             f"ServingRuntime({self.model_cfg.name}, buckets={self.buckets}, "
             f"replicas={len(self.pool.replicas)}, max_batch={self.config.max_batch}, "
-            f"devices={[str(r.device) for r in self.pool.replicas]})"
+            f"devices={['+'.join(str(d) for d in r.devices) for r in self.pool.replicas]})"
         )
 
 

@@ -365,10 +365,17 @@ class BatchScheduler:
         if not live:
             return
         bucket, policy, _slo = key
+        # the preprocess cache does not compose with sharded policies (their
+        # batches run the mesh artifact end to end; cached rows are single-
+        # device host trees) — a sharded batch carries no cache at all, so
+        # the dispatch layer's cache paths never see it
+        cache = (
+            self.cache if getattr(policy, "sharding", None) is None else None
+        )
         try:
             entries: tuple = ()
             rows = None
-            if self.cache is not None:
+            if cache is not None:
                 # probe material is computed lazily HERE, on the scheduler
                 # thread: admission stays O(1) for clients, and the fit +
                 # hash overlap batch execution on the replica workers
@@ -379,7 +386,7 @@ class BatchScheduler:
                         req.fitted = pad_cloud(
                             np.asarray(req.cloud, np.float32), bucket
                         )[0]
-                        req.cache_key = self.cache.key_for(
+                        req.cache_key = cache.key_for(
                             bucket, policy, req.fitted
                         )
                 # side-effect-free peek: a hit's canonical row replaces the
@@ -390,7 +397,7 @@ class BatchScheduler:
                 # on the replica are already visible — a peek-miss here can
                 # still become a hit there.
                 probe = [
-                    self.cache.peek(req.cache_key)
+                    cache.peek(req.cache_key)
                     if req.cache_key is not None
                     else None
                     for req in live
@@ -426,7 +433,7 @@ class BatchScheduler:
             bucket=bucket,
             policy=policy,
             batch=batch,
-            cache=self.cache,
+            cache=cache,
             cache_entries=entries,
             batch_id=self.tracer.next_batch_id() if self.tracer is not None else -1,
         )

@@ -24,6 +24,29 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 _STATE = threading.local()
 
+# The one mesh axis a serving replica's device group is laid out over
+# (launch.mesh.make_replica_mesh).  Model code never names the axis
+# directly: `nn.linear` asks `replica_axis_active()` and the accelerator's
+# sharded artifacts map over it — keeping the axis name a single shared
+# constant is what lets the ExecutionPolicy.sharding knob stay inert under
+# plain jit (the axis is simply unbound there).
+REPLICA_AXIS = "shard"
+
+
+def replica_axis_active() -> bool:
+    """True iff tracing inside a computation mapped over REPLICA_AXIS.
+
+    Inside `shard_map(..., mesh=make_replica_mesh(devs))` the axis is bound
+    and policy-driven sharded code paths activate; under plain jit (or
+    eager) the axis is unbound and every sharding knob is a no-op, so one
+    policy object is safe to thread through both worlds.
+    """
+    try:
+        jax.core.axis_frame(REPLICA_AXIS)
+        return True
+    except NameError:
+        return False
+
 
 @contextlib.contextmanager
 def activation_sharding(mesh: Mesh, *, mode: str = "sp"):

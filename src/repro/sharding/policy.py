@@ -227,3 +227,34 @@ def to_shardings(spec_tree: Any, mesh: Mesh):
         spec_tree,
         is_leaf=lambda x: isinstance(x, (P, NamedSharding)),
     )
+
+
+# -- PC2IM serving: one replica spanning a device group ----------------------
+
+REPLICA_SHARDING_MODES = ("batch", "tensor")
+
+
+def replica_specs(mode: str) -> tuple[P, P, P]:
+    """(params, points, logits) PartitionSpecs for one mesh-sharded replica.
+
+    Resolution for `ExecutionPolicy.sharding` over the 1-D replica mesh
+    (launch.mesh.make_replica_mesh, axis hints.REPLICA_AXIS):
+
+      * params always replicate — each device of the group holds the full
+        weight copy, exactly like a single-device replica pins one.
+      * the points batch dim shards over the group in BOTH modes: "batch"
+        keeps it sharded end to end (each device runs the full pipeline on
+        its rows), while "tensor" preprocesses the local rows then
+        all-gathers the neighborhoods so the feature MLPs can column-split
+        each weight across the group and concatenate the partial products
+        (the paper's split-concatenate dataflow) — the gather/slice happen
+        INSIDE the mapped function, so the boundary spec is the same.
+      * logits leave batch-sharded; jit reassembles the global batch.
+    """
+    if mode not in REPLICA_SHARDING_MODES:
+        raise ValueError(
+            f"sharding mode must be one of {REPLICA_SHARDING_MODES}, got {mode!r}"
+        )
+    from repro.sharding.hints import REPLICA_AXIS
+
+    return P(), P(REPLICA_AXIS), P(REPLICA_AXIS)

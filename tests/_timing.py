@@ -1,0 +1,48 @@
+"""Shared timing helpers for timing-sensitive serving tests.
+
+The convention (see ARCHITECTURE.md, testing notes): tests never gate
+*liveness* on a bare wall-clock sleep — they wait on an observable
+condition with a generous deadline, so a loaded machine makes the test
+slower, never flakier.  Dwell/delay logic is made deterministic by
+rewinding the recorded timestamp (e.g. `Replica.evicted_t`) instead of
+sleeping the dwell out.  Every deadline is scaled by the
+``PC2IM_TEST_TIME_MULT`` env var (default 1.0, floor 1.0) so a saturated
+CI host can stretch every budget with one knob instead of per-test edits.
+"""
+
+from __future__ import annotations
+
+import os
+import time
+from typing import Callable
+
+
+def time_mult() -> float:
+    """Global test-time budget multiplier from PC2IM_TEST_TIME_MULT (>= 1)."""
+    try:
+        return max(1.0, float(os.environ.get("PC2IM_TEST_TIME_MULT", "1")))
+    except ValueError:
+        return 1.0
+
+
+def wait_until(
+    pred: Callable,
+    timeout_s: float = 10.0,
+    interval_s: float = 0.005,
+    desc: str = "condition",
+):
+    """Poll `pred` until truthy; raise AssertionError at the scaled deadline.
+
+    Returns the final pred() value so callers can assert on it directly.
+    """
+    budget = timeout_s * time_mult()
+    deadline = time.monotonic() + budget
+    while True:
+        val = pred()
+        if val:
+            return val
+        if time.monotonic() >= deadline:
+            raise AssertionError(
+                f"timed out after {budget:.1f}s waiting for {desc}"
+            )
+        time.sleep(interval_s)

@@ -1,79 +1,70 @@
 """Pipeline-parallel numerics on a real multi-device (host-platform) mesh.
 
-Runs in a SUBPROCESS with xla_force_host_platform_device_count=4 so the main
-test process keeps its single-device view (per the dry-run isolation rule).
+Runs in a SUBPROCESS with xla_force_host_platform_device_count=N via the
+shared tests/_multidev.py substrate, so the main test process keeps its
+single-device view (per the dry-run isolation rule).  The children emit
+their outputs and references back to the parent, which asserts here.
 """
 
-import os
-import subprocess
-import sys
+import numpy as np
 
-SCRIPT = r"""
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
-import jax, jax.numpy as jnp, numpy as np
-from repro.parallel import pipeline_forward
-
-mesh = jax.make_mesh((4,), ("stage",))
-n_stages, n_micro, mb, d = 4, 8, 4, 16
-w = jax.random.normal(jax.random.PRNGKey(0), (n_stages, d, d)) * 0.3
-x = jax.random.normal(jax.random.PRNGKey(1), (n_micro, mb, d))
-
-def stage_fn(wp, xx, stage):
-    return jnp.tanh(xx @ wp)
-
-out = pipeline_forward(mesh, "stage", stage_fn, w, x)
-ref = x
-for s in range(n_stages):
-    ref = jnp.tanh(ref @ w[s])
-np.testing.assert_allclose(np.array(out), np.array(ref), rtol=2e-5, atol=2e-5)
-print("PIPELINE_OK")
-"""
-
-
-EXECUTOR_SCRIPT = r"""
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
-import jax, numpy as np
-from repro.configs.base import get_config
-from repro.core.accelerator import PipelinedExecutor, get_accelerator
-from repro.data.pointclouds import sample_batch
-
-cfg = get_config("pointnet2-cls", smoke=True)
-accel = get_accelerator(cfg)
-params = accel.init(jax.random.PRNGKey(0))
-batches = [np.asarray(sample_batch(jax.random.PRNGKey(3 + i), 2, cfg.n_points)[0])
-           for i in range(4)]
-ex = PipelinedExecutor(accel)  # stage A on device 0, stage B + params on device 1
-assert len(ex.devices) == 2, ex.devices
-outs = ex.run(params, batches)
-for out, x in zip(outs, batches):
-    np.testing.assert_array_equal(np.asarray(out), np.asarray(accel.infer(params, x)))
-print("EXECUTOR_OK")
-"""
-
-
-def _run_subprocess(script):
-    env = dict(os.environ)
-    env["PYTHONPATH"] = "src"
-    return subprocess.run(
-        [sys.executable, "-c", script],
-        capture_output=True,
-        text=True,
-        timeout=300,
-        env=env,
-        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
-    )
+from _multidev import assert_bitwise, run_in_child
 
 
 def test_pipeline_4stage_subprocess():
-    res = _run_subprocess(SCRIPT)
-    assert "PIPELINE_OK" in res.stdout, res.stderr[-2000:]
+    payload = run_in_child(
+        """
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.parallel import pipeline_forward
+
+        mesh = jax.make_mesh((4,), ("stage",))
+        n_stages, n_micro, mb, d = 4, 8, 4, 16
+        w = jax.random.normal(jax.random.PRNGKey(0), (n_stages, d, d)) * 0.3
+        x = jax.random.normal(jax.random.PRNGKey(1), (n_micro, mb, d))
+
+        def stage_fn(wp, xx, stage):
+            return jnp.tanh(xx @ wp)
+
+        out = pipeline_forward(mesh, "stage", stage_fn, w, x)
+        ref = x
+        for s in range(n_stages):
+            ref = jnp.tanh(ref @ w[s])
+        emit("out", out)
+        emit("ref", ref)
+        """,
+        n_devices=4,
+    )
+    np.testing.assert_allclose(
+        payload["out"], payload["ref"], rtol=2e-5, atol=2e-5
+    )
 
 
 def test_pipelined_executor_two_devices_subprocess():
     """The >=2-device branch of PipelinedExecutor: preprocess pinned to
     device 0, feature stage + params to device 1, hand-off transferred —
     still bitwise-equal to the sequential fused infer."""
-    res = _run_subprocess(EXECUTOR_SCRIPT)
-    assert "EXECUTOR_OK" in res.stdout, res.stderr[-2000:]
+    payload = run_in_child(
+        """
+        import jax, numpy as np
+        from repro.configs.base import get_config
+        from repro.core.accelerator import PipelinedExecutor, get_accelerator
+        from repro.data.pointclouds import sample_batch
+
+        cfg = get_config("pointnet2-cls", smoke=True)
+        accel = get_accelerator(cfg)
+        params = accel.init(jax.random.PRNGKey(0))
+        batches = [
+            np.asarray(sample_batch(jax.random.PRNGKey(3 + i), 2, cfg.n_points)[0])
+            for i in range(4)
+        ]
+        ex = PipelinedExecutor(accel)  # stage A on device 0, stage B on device 1
+        assert len(ex.devices) == 2, ex.devices
+        outs = ex.run(params, batches)
+        for i, (out, x) in enumerate(zip(outs, batches)):
+            emit(f"out{i}", out)
+            emit(f"ref{i}", accel.infer(params, x))
+        """,
+        n_devices=2,
+    )
+    for i in range(4):
+        assert_bitwise(payload, f"out{i}", f"ref{i}")

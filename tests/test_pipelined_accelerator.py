@@ -92,7 +92,7 @@ class TestPipelineKnob:
         assert a is not b
         stats = cache_stats()
         assert stats.size == 2 and stats.misses == 2
-        assert {key[-1] for key in stats.keys} == {"sequential", "pipelined"}
+        assert {key[3] for key in stats.keys} == {"sequential", "pipelined"}
         # identical policies still share one artifact
         assert b is get_accelerator(
             cfg, ExecutionPolicy(backend="xla", pipeline="pipelined")
@@ -238,11 +238,11 @@ class TestServeMixedSchedules:
             np.testing.assert_array_equal(out, direct, err_msg=str(i))
 
         stats = cache_stats()
-        assert {key[-1] for key in stats.keys} == {"sequential", "pipelined"}
+        assert {key[3] for key in stats.keys} == {"sequential", "pipelined"}
         records = [b for b in rt.metrics.batch_records if b.n_real]
         assert sum(b.n_real for b in records) == len(clouds)
         # metrics separate the two schedules too (per-schedule durations)
-        assert {b.policy_key[-1] for b in records} == {"sequential", "pipelined"}
+        assert {b.policy_key[2] for b in records} == {"sequential", "pipelined"}
 
     def test_concurrent_threads_mixed_schedules(self, cfg, params):
         """8 threads hammering both schedules at once: all complete, all
@@ -326,6 +326,6 @@ class TestServeMixedSchedules:
         try:
             rt.warmup(policies=(ExecutionPolicy(pipeline="pipelined"),))
             stats = cache_stats()
-            assert "pipelined" in {key[-1] for key in stats.keys}
+            assert "pipelined" in {key[3] for key in stats.keys}
         finally:
             rt.stop()

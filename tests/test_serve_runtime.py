@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from _timing import time_mult, wait_until
 
 from repro.configs.base import get_config
 from repro.core import accelerator as accel_mod
@@ -40,7 +41,9 @@ from repro.serve.queue import Request
 jax.config.update("jax_platform_name", "cpu")
 
 MAX_BATCH = 4
-WAIT_S = 60  # bound on every future/result wait: fail, never hang
+# bound on every future/result wait: fail, never hang.  Scaled by
+# PC2IM_TEST_TIME_MULT (tests/_timing.py) for saturated CI hosts.
+WAIT_S = 60 * time_mult()
 
 
 @pytest.fixture(scope="module")
@@ -401,7 +404,12 @@ class TestRuntimeLifecycle:
         rt = _runtime(cfg, params, max_wait_s=10.0)  # wait longer than test
         futs = [rt.submit(c) for c in _clouds(3, seed=5)]
         rt.start()
-        time.sleep(0.05)
+        # wait on the observable hand-off (scheduler drained the admission
+        # queue into its pending partial batch), not a wall-clock guess
+        wait_until(
+            lambda: rt.queue.depth() == 0,
+            desc="scheduler to drain the admission queue",
+        )
         rt.stop()  # drain=True must flush the pending partial batch
         for f in futs:
             assert f.result(timeout=1).shape == (cfg.n_classes,)
@@ -450,7 +458,7 @@ class TestCacheIntrospection:
         assert a is b
         s1 = cache_stats()
         assert (s1.hits, s1.misses, s1.size) == (1, 1, 1)
-        assert s1.keys == ((cfg.name, "none", "auto", "sequential"),)
+        assert s1.keys == ((cfg.name, "none", "auto", "sequential", None),)
         clear_cache()
         assert cache_stats().size == 0
         # fresh instance after clear (old one stays valid for holders)

@@ -18,6 +18,7 @@ import jax
 import numpy as np
 import pytest
 from _hypothesis import given, settings, st
+from _timing import time_mult
 
 from repro.configs.base import get_config
 from repro.core.accelerator import get_accelerator
@@ -49,7 +50,9 @@ from repro.serve.slo import drain_key
 jax.config.update("jax_platform_name", "cpu")
 
 MAX_BATCH = 4
-WAIT_S = 60  # bound on every future/result wait: fail, never hang
+# bound on every future/result wait: fail, never hang.  Scaled by
+# PC2IM_TEST_TIME_MULT (tests/_timing.py) for saturated CI hosts.
+WAIT_S = 60 * time_mult()
 
 
 @pytest.fixture(scope="module")
@@ -477,12 +480,14 @@ class TestAutoscaler:
         pool = ReplicaPool(cfg, params, n_replicas=2, metrics=ServeMetrics())
         try:
             scaler = Autoscaler(
-                pool, _FakeQueue(), AutoscalerConfig(rejoin_delay_s=0.1)
+                pool, _FakeQueue(), AutoscalerConfig(rejoin_delay_s=60.0)
             )
             pool.evict(1, reason="test")
-            scaler.poll_once()  # dwell not elapsed yet
+            scaler.poll_once()  # a 60s dwell cannot have elapsed in-test
             assert not pool.replicas[1].alive
-            time.sleep(0.12)
+            # rewind the eviction instant instead of sleeping out the dwell:
+            # deterministic on any machine (see tests/_timing.py convention)
+            pool.replicas[1].evicted_t -= 120.0
             scaler.poll_once()
             assert pool.replicas[1].alive
             assert [e.action for e in scaler.events] == ["rejoin"]
