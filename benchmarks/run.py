@@ -188,6 +188,21 @@ def obs_overhead_bench(smoke: bool = False) -> list[dict]:
     return obs_overhead.run(smoke=smoke)
 
 
+def serve_adapt_bench(smoke: bool = False) -> list[dict]:
+    """Adaptive control plane: feedback-tuned knobs vs static defaults on a
+    shifted size-distribution trace offered above the static capacity (see
+    benchmarks/serve_load.run_adapt).  ASSERTS the controller applied >= 1
+    reconfiguration with logged evidence, every response is bitwise-equal
+    to the direct accelerator reference, no request is lost or duplicated
+    across the live swap, adapted knobs beat static in throughput or p95,
+    and DRR gives the bulk class >= 0.8x its weight share under a
+    saturating two-class burst with zero interactive deadline expiries —
+    failures raise and fail the lane."""
+    from benchmarks import serve_load
+
+    return serve_load.run_adapt(smoke=smoke)
+
+
 def _print_rows(rows: list) -> None:
     """Print wall-clock rows as name,us,note CSV (one place for the format)."""
     import math
@@ -217,16 +232,21 @@ def main() -> None:
         # tracing-off, asserting the <= 3% throughput budget and span/export
         # well-formedness) + the sharded mesh-replica lane (forced-host-device
         # subprocess asserting bitwise parity of sharded vs single-device
-        # responses), reduced size — keeps the open-loop path, the cache hot
-        # path, the stage-overlap speedup, the control plane, the tracing
-        # layer and the sharded dispatch path exercised on every push without
-        # the full paper-table sweep.
+        # responses) + the adaptive control-plane lane (feedback-tuned knobs
+        # vs static defaults, asserting convergence with logged evidence,
+        # bitwise parity across the live reconfiguration, the adapted-beats-
+        # static contract and the DRR weight-share floor), reduced size —
+        # keeps the open-loop path, the cache hot path, the stage-overlap
+        # speedup, the control plane, the tracing layer, the sharded dispatch
+        # path and the adaptation loop exercised on every push without the
+        # full paper-table sweep.
         _print_rows(serve_bench(smoke=True))
         _print_rows(serve_cache_bench(smoke=True))
         _print_rows(pipeline_bench(smoke=True))
         _print_rows(serve_slo_bench(smoke=True))
         _print_rows(serve_shard_bench(smoke=True))
         _print_rows(obs_overhead_bench(smoke=True))
+        _print_rows(serve_adapt_bench(smoke=True))
         return
     for mod_name, kwargs in [
         ("benchmarks.fig12b_preproc_energy", {}),
@@ -254,6 +274,7 @@ def main() -> None:
     _print_rows(serve_slo_bench())
     _print_rows(serve_shard_bench())
     _print_rows(obs_overhead_bench())
+    _print_rows(serve_adapt_bench())
 
 
 if __name__ == "__main__":

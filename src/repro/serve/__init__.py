@@ -9,13 +9,29 @@ replica pool with heartbeat eviction and the two-stage pipelined path),
 cache: content-addressed duplicate clouds skip the preprocess stage and
 enter the feature stage directly.  The SLO control plane sits on top:
 `slo` (service classes with priority/deadline/shed policy), `autoscaler`
-(replica rejoin + queue-depth scaling) and `chaos` (deterministic fault
-injection for recovery tests).  `trace` / `obs` are the observability
-layer: a ring-buffered lifecycle tracer every component reports into, and
-the reductions/exporters (stage breakdown, Chrome-trace JSON, Prometheus
-text) built on it.  `pointcloud` / `step` are the synchronous per-batch
-serve functions.  See docs/ARCHITECTURE.md for the dataflow diagram.
+(replica rejoin + queue-depth/cost-signal scaling) and `chaos`
+(deterministic fault injection for recovery tests).  `trace` / `obs` are
+the observability layer: a ring-buffered lifecycle tracer every component
+reports into, and the reductions/exporters (stage breakdown, Chrome-trace
+JSON, Prometheus text — live via `MetricsServer`) built on it.  `adapt`
+closes the loop from observation back to the knobs: the
+`AdaptiveController` retunes buckets / max_batch / batching patience
+through the runtime's pause-free `reconfigure` path.  `pointcloud` /
+`step` are the synchronous per-batch serve functions.  See
+docs/ARCHITECTURE.md for the dataflow diagram.
 """
+
+from repro.serve.adapt import (  # noqa: F401
+    AdaptiveConfig,
+    AdaptiveController,
+    Decision,
+    DecisionLog,
+    Histogram,
+    interarrival_mean,
+    padding_waste,
+    propose_buckets,
+    propose_wait,
+)
 
 from repro.serve.autoscaler import Autoscaler, AutoscalerConfig, ScaleEvent  # noqa: F401
 from repro.serve.chaos import ChaosError, ChaosEvent, ChaosInjector, Fault  # noqa: F401
@@ -51,6 +67,7 @@ from repro.serve.queue import (  # noqa: F401
 )
 from repro.serve.obs import (  # noqa: F401
     BatchCheck,
+    MetricsServer,
     Reporter,
     RequestTimeline,
     STAGES,

@@ -17,6 +17,14 @@ module closes the loop.  A background thread watches two signals:
     replica down to `min_replicas`.  Every scale action starts a cooldown
     so the loop cannot flap; fault rejoins ignore the cooldown — recovery
     is not a scaling decision.
+  * **cost** (opt-in) — deadline slack and shed rate.  Queue depth is a
+    lagging proxy: a shallow queue of about-to-expire interactive requests,
+    or a queue kept artificially short by admission shedding, both look
+    healthy to the depth trigger.  With `slack_scale_up_s` set, any class
+    whose tightest queued deadline is closer than the threshold triggers
+    growth (reason ``"slack:<class>"``); with `shed_scale_up_rate` set, a
+    shed rate above the threshold does (reason ``"shed"``).  Every
+    `ScaleEvent` carries the `reason` that fired it.
 
 Every action lands in `events` (`ScaleEvent`) for tests and the serve_slo
 benchmark to assert on.  The loop never raises: a failed action (e.g. a
@@ -50,6 +58,9 @@ class AutoscalerConfig:
     min_replicas: int = 1
     max_replicas: int | None = None
     cooldown_s: float = 1.0  # quiet period after any scale action
+    # cost signals (None = depth-only triggering, the pre-existing default)
+    slack_scale_up_s: float | None = None  # tightest queued deadline slack
+    shed_scale_up_rate: float | None = None  # shed requests/s that trigger growth
 
     def __post_init__(self):
         if self.poll_interval_s <= 0:
@@ -60,6 +71,10 @@ class AutoscalerConfig:
             raise ValueError("max_replicas must be >= min_replicas")
         if self.scale_down_depth > self.scale_up_depth:
             raise ValueError("scale_down_depth must be <= scale_up_depth")
+        if self.slack_scale_up_s is not None and self.slack_scale_up_s <= 0:
+            raise ValueError("slack_scale_up_s must be > 0 or None")
+        if self.shed_scale_up_rate is not None and self.shed_scale_up_rate <= 0:
+            raise ValueError("shed_scale_up_rate must be > 0 or None")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -70,6 +85,7 @@ class ScaleEvent:
     replica_id: int  # -1 for errors without a specific replica
     depth: int  # queue depth observed when the action was taken
     t: float  # time.monotonic() at the action
+    reason: str = ""  # signal that fired: "depth", "slack:<class>", "shed"
 
 
 class Autoscaler:
@@ -82,17 +98,19 @@ class Autoscaler:
     """
 
     def __init__(self, pool, queue, config: AutoscalerConfig | None = None,
-                 *, tracer=None):
+                 *, tracer=None, metrics=None):
         self.pool = pool
         self.queue = queue
         self.config = config or AutoscalerConfig()
         self.tracer = tracer  # Tracer | None — scale actions fold into the trace
+        self.metrics = metrics  # ServeMetrics | None — shed-rate cost signal
         self.events: list[ScaleEvent] = []
         self._lock = threading.Lock()
         self._stop = threading.Event()
         self._thread: threading.Thread | None = None
         self._cooldown_until = 0.0
         self._shallow_ticks = 0
+        self._shed_mark: tuple[int, float] | None = None  # (count, t) last poll
 
     # -- lifecycle ------------------------------------------------------------
 
@@ -127,18 +145,20 @@ class Autoscaler:
         "error": "scale.error",
     }
 
-    def _record(self, action: str, rid: int, depth: int) -> None:
+    def _record(self, action: str, rid: int, depth: int, reason: str = "") -> None:
         with self._lock:
-            self.events.append(ScaleEvent(action, rid, depth, time.monotonic()))
+            self.events.append(
+                ScaleEvent(action, rid, depth, time.monotonic(), reason)
+            )
         if self.tracer is not None:
             self.tracer.emit(
                 self._TRACE_EVENTS[action],
                 replica_id=rid,
-                args={"depth": depth},
+                args={"depth": depth, "reason": reason},
             )
 
     def poll_once(self) -> None:
-        """One control step: rejoin the dead, then scale on queue depth.
+        """One control step: rejoin the dead, then scale on depth + cost.
 
         Public so tests can drive the loop deterministically; the polling
         thread calls it every `poll_interval_s`.  Never raises.
@@ -148,9 +168,32 @@ class Autoscaler:
         except Exception:  # noqa: BLE001 — queue closed mid-shutdown
             return
         now = time.monotonic()
+        pressure = self._cost_pressure(now)  # sampled every poll: the shed
+        # rate window must keep moving even through the cooldown
         self._rejoin_dead(now, depth)
         if now >= self._cooldown_until:
-            self._scale(now, depth)
+            self._scale(now, depth, pressure)
+
+    def _cost_pressure(self, now: float) -> str | None:
+        """Cost-signal scale-up reason, or None when no signal fires."""
+        cfg = self.config
+        if cfg.slack_scale_up_s is not None:
+            try:
+                slack = self.queue.slack_by_class(now)
+            except Exception:  # noqa: BLE001 — queue closed mid-shutdown
+                slack = {}
+            for name in sorted(slack, key=lambda n: slack[n]):
+                if slack[name] < cfg.slack_scale_up_s:
+                    return f"slack:{name}"
+        if cfg.shed_scale_up_rate is not None and self.metrics is not None:
+            count = self.metrics.shed
+            mark = self._shed_mark
+            self._shed_mark = (count, now)
+            if mark is not None and now > mark[1]:
+                rate = (count - mark[0]) / (now - mark[1])
+                if rate > cfg.shed_scale_up_rate:
+                    return "shed"
+        return None
 
     def _rejoin_dead(self, now: float, depth: int) -> None:
         """Re-admit fault-evicted replicas once their dwell elapsed.
@@ -169,14 +212,20 @@ class Autoscaler:
             except Exception:  # noqa: BLE001 — warmup replay failed; retry later
                 self._record("error", rep.id, depth)
 
-    def _scale(self, now: float, depth: int) -> None:
+    def _scale(self, now: float, depth: int, pressure: str | None = None) -> None:
         alive = self.pool.alive_replicas()
         if not alive:
             return  # nothing to scale against; rejoin handles recovery
         per_replica = depth / len(alive)
         if per_replica >= self.config.scale_up_depth:
             self._shallow_ticks = 0
-            self._scale_up(now, depth, n_alive=len(alive))
+            self._scale_up(now, depth, n_alive=len(alive), reason="depth")
+            return
+        if pressure is not None:
+            # a cost signal overrides the shallow-depth read: the queue may
+            # be short precisely BECAUSE requests are being shed or expiring
+            self._shallow_ticks = 0
+            self._scale_up(now, depth, n_alive=len(alive), reason=pressure)
             return
         if per_replica > self.config.scale_down_depth:
             self._shallow_ticks = 0
@@ -189,10 +238,11 @@ class Autoscaler:
             self._shallow_ticks = 0
             victim = max(alive, key=lambda r: r.id)
             if self.pool.retire(victim.id):
-                self._record("scale_down", victim.id, depth)
+                self._record("scale_down", victim.id, depth, "depth")
                 self._cooldown_until = now + self.config.cooldown_s
 
-    def _scale_up(self, now: float, depth: int, *, n_alive: int) -> None:
+    def _scale_up(self, now: float, depth: int, *, n_alive: int,
+                  reason: str = "depth") -> None:
         cap = (
             self.config.max_replicas
             if self.config.max_replicas is not None
@@ -206,12 +256,12 @@ class Autoscaler:
             for rep in self.pool.replicas:
                 if not rep.alive and rep.retired:
                     if self.pool.rejoin(rep.id):
-                        self._record("scale_up", rep.id, depth)
+                        self._record("scale_up", rep.id, depth, reason)
                         self._cooldown_until = now + self.config.cooldown_s
                     return
             if len(self.pool.replicas) < cap:
                 rid = self.pool.add_replica()
-                self._record("scale_up", rid, depth)
+                self._record("scale_up", rid, depth, reason)
                 self._cooldown_until = now + self.config.cooldown_s
         except Exception:  # noqa: BLE001 — warmup failed; retry next poll
-            self._record("error", -1, depth)
+            self._record("error", -1, depth, reason)

@@ -1012,10 +1012,15 @@ class ReplicaPool:
         the registered set on a fresh replica so it joins warm.
         """
         with self._lock:
-            if not any(
-                m.bucket == mb.bucket and m.policy == mb.policy
-                for m in self._warmup_mbs
-            ):
+            for i, m in enumerate(self._warmup_mbs):
+                if m.bucket == mb.bucket and m.policy == mb.policy:
+                    # same key, new static shape (a live max_batch
+                    # reconfiguration): rejoins must replay the CURRENT
+                    # shape, so the registration is replaced, not dropped
+                    if m.batch.shape != mb.batch.shape:
+                        self._warmup_mbs[i] = mb
+                    break
+            else:
                 self._warmup_mbs.append(mb)
         futs = []
         for rep in self.alive_replicas():

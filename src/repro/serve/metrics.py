@@ -188,6 +188,10 @@ class ServeMetrics:
         self.inflight_hwm = 0
         self._straggler_by_replica: dict[int, int] = {}
         self._latencies: list[float] = []
+        self._latency_ts: list[float] = []  # completion stamps, parallel to _latencies
+        self._sizes: list[int] = []  # admitted request sizes (n_points)
+        self._arrivals: list[float] = []  # admission stamps, parallel to _sizes
+        self._arrival_names: list[str] = []  # SLO class names, parallel to _sizes
         self._depths: list[int] = []
         self._batches: list[BatchRecord] = []
         self._by_class: dict[str, _ClassStats] = {}
@@ -207,6 +211,22 @@ class ServeMetrics:
             self._cls(slo_name).submitted += 1
             if self._first_t is None:
                 self._first_t = time.monotonic()
+
+    def record_arrival(self, n_points: int, slo_name: str | None = None):
+        """Record one admitted request's cloud size and arrival instant.
+
+        The adaptive controller's raw material: `request_sizes()` feeds the
+        bucket-boundary proposal, `arrival_times()` / `arrivals_by_class()`
+        the inter-arrival and batching-patience estimates.  Reservoir-
+        bounded like every series.
+        """
+        with self._lock:
+            self._sizes.append(int(n_points))
+            self._arrivals.append(time.monotonic())
+            self._arrival_names.append(slo_name or "default")
+            del self._sizes[:-_RESERVOIR]
+            del self._arrivals[:-_RESERVOIR]
+            del self._arrival_names[:-_RESERVOIR]
 
     def record_rejected(self, slo_name: str | None = None):
         """Count one request refused at admission (QueueFull/QueueClosed)."""
@@ -297,7 +317,9 @@ class ServeMetrics:
             self.completed += 1
             self._last_t = time.monotonic()
             self._latencies.append(latency_s)
+            self._latency_ts.append(self._last_t)
             del self._latencies[:-_RESERVOIR]
+            del self._latency_ts[:-_RESERVOIR]
             cls = self._cls(slo_name)
             cls.completed += 1
             cls.latencies.append(latency_s)
@@ -316,6 +338,41 @@ class ServeMetrics:
             del self._batches[:-_RESERVOIR]
 
     # -- reading --------------------------------------------------------------
+
+    def request_sizes(self) -> np.ndarray:
+        """Retained admitted-request sizes (newest _RESERVOIR), int64 array."""
+        with self._lock:
+            return np.asarray(self._sizes, np.int64)
+
+    def arrival_times(self) -> np.ndarray:
+        """Retained admission instants (time.monotonic), float64 array."""
+        with self._lock:
+            return np.asarray(self._arrivals, np.float64)
+
+    def arrivals_by_class(self) -> dict[str, np.ndarray]:
+        """Admission instants split per SLO class name (per-class patience)."""
+        with self._lock:
+            out: dict[str, list[float]] = {}
+            for t, name in zip(self._arrivals, self._arrival_names):
+                out.setdefault(name, []).append(t)
+            return {name: np.asarray(ts, np.float64) for name, ts in out.items()}
+
+    def latencies_since(self, t: float) -> np.ndarray:
+        """Latencies of requests completed at or after monotonic instant `t`.
+
+        The rollback guard's window: percentiles over only the completions
+        observed since a reconfiguration, so a swap's effect is judged
+        against fresh evidence rather than the whole reservoir.
+        """
+        with self._lock:
+            return np.asarray(
+                [
+                    lat
+                    for lat, ts in zip(self._latencies, self._latency_ts)
+                    if ts >= t
+                ],
+                np.float64,
+            )
 
     @property
     def batch_records(self) -> tuple[BatchRecord, ...]:

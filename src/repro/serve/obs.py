@@ -24,9 +24,11 @@ periodic :class:`Reporter` without touching the hot path:
 * :func:`prometheus_text` — Prometheus text exposition of a
   :class:`~repro.serve.metrics.MetricsSnapshot`.
 
-:class:`Reporter` is the only stateful thing here: a daemon thread on
-:class:`~repro.serve.runtime.ServingRuntime` that periodically snapshots the
-metrics and hands a one-line summary to a sink.
+Two stateful exporters live at the end: :class:`Reporter`, a daemon thread
+on :class:`~repro.serve.runtime.ServingRuntime` that periodically snapshots
+the metrics and hands a one-line summary to a sink, and
+:class:`MetricsServer`, an opt-in stdlib HTTP listener serving the live
+:func:`prometheus_text` exposition at ``GET /metrics`` (plus ``/healthz``).
 """
 
 from __future__ import annotations
@@ -622,3 +624,80 @@ class Reporter:
     def _run(self) -> None:
         while not self._stop.wait(self.interval_s):
             self.report_once()
+
+
+class MetricsServer:
+    """Opt-in live scrape endpoint over one runtime's ServeMetrics.
+
+    A stdlib ``ThreadingHTTPServer`` (no dependencies) serving
+    ``GET /metrics`` — :func:`prometheus_text` of a fresh snapshot — and
+    ``GET /healthz`` for liveness probes.  Lifecycle mirrors
+    :class:`Reporter`: the runtime starts it in ``start()`` and tears it
+    down in ``stop()``.  ``port=0`` binds an ephemeral port; read the
+    resolved address from :attr:`url` after :meth:`start`.
+    """
+
+    def __init__(self, metrics, *, host: str = "127.0.0.1", port: int = 0):
+        self.metrics = metrics
+        self.host = host
+        self.port = port
+        self._server = None
+        self._thread: threading.Thread | None = None
+
+    @property
+    def url(self) -> str:
+        """Base URL of the listener (port resolved after start())."""
+        return f"http://{self.host}:{self.port}"
+
+    def start(self) -> "MetricsServer":
+        """Bind and serve in a daemon thread (idempotent); returns self."""
+        if self._server is not None:
+            return self
+        import http.server
+
+        metrics = self.metrics
+
+        class Handler(http.server.BaseHTTPRequestHandler):
+            """Two-route scrape handler: /metrics (Prometheus) + /healthz."""
+
+            def do_GET(self):  # noqa: N802 — http.server API
+                """Serve one GET; unknown paths get 404."""
+                if self.path == "/metrics":
+                    body = prometheus_text(metrics.snapshot()).encode()
+                    ctype = "text/plain; version=0.0.4; charset=utf-8"
+                elif self.path == "/healthz":
+                    body = b"ok\n"
+                    ctype = "text/plain; charset=utf-8"
+                else:
+                    self.send_error(404)
+                    return
+                self.send_response(200)
+                self.send_header("Content-Type", ctype)
+                self.send_header("Content-Length", str(len(body)))
+                self.end_headers()
+                self.wfile.write(body)
+
+            def log_message(self, *args):
+                """Silenced — periodic scrapes must not spam stderr."""
+
+        self._server = http.server.ThreadingHTTPServer(
+            (self.host, self.port), Handler
+        )
+        self.port = self._server.server_address[1]
+        self._thread = threading.Thread(
+            target=self._server.serve_forever, daemon=True,
+            name="pc2im-metrics-http",
+        )
+        self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        """Shut the listener down and join the serving thread."""
+        if self._server is None:
+            return
+        self._server.shutdown()
+        self._server.server_close()
+        self._server = None
+        if self._thread is not None:
+            self._thread.join(timeout=10.0)
+            self._thread = None

@@ -12,7 +12,12 @@ whose answer nobody is still waiting for.
 Requests carry an `SLOClass` (serve/slo.py) and wait in one lane per class.
 `drain` releases requests in priority order, earliest-deadline-first within
 a priority — so under backlog the interactive lane empties before the bulk
-lane is touched.  Load shedding is two-stage and always explicit:
+lane is touched.  Passing `class_weights` switches the drain to deficit
+round robin (DRR) across the lanes: each backlogged class receives service
+proportional to its weight (EDF order preserved within a class), so a
+saturated high class can no longer starve lower ones completely — the
+weighted-fair alternative to the strict-priority default.  Load shedding is
+two-stage and always explicit:
 
   * over the shed budget (`shed_threshold`) a sheddable admission is
     rejected with `Shed` at the front door, and
@@ -26,6 +31,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import itertools
+import math
 import threading
 import time
 from concurrent.futures import Future, InvalidStateError
@@ -155,7 +161,14 @@ class AdmissionQueue:
     One deque per SLOClass; `drain` releases requests by `slo.drain_key`
     (priority descending, earliest deadline first within a priority, then
     admission order), so the single-class default degenerates to the FIFO
-    the pre-SLO runtime had.  `shed_threshold` is the load-shedding budget:
+    the pre-SLO runtime had.  `class_weights` (class name -> weight > 0)
+    switches the drain to deficit round robin: lanes are visited in round-
+    robin order, each visit grants the lane `weight` credits and one credit
+    releases one request (EDF-first within the lane), with the unspent
+    deficit carried to the lane's next turn — so over a sustained backlog
+    each class's drained share converges to its weight fraction and no
+    backlogged class starves.  Classes absent from the mapping drain with
+    weight 1.0.  `shed_threshold` is the load-shedding budget:
     above it sheddable admissions raise `Shed`; a completely full queue
     evicts queued sheddable work to admit strictly-higher-priority traffic
     (each victim's future fails with `Shed` and `on_shed` is told).
@@ -169,6 +182,7 @@ class AdmissionQueue:
         on_shed: Callable[[Request], None] | None = None,
         metrics=None,
         tracer: Tracer | None = None,
+        class_weights: dict[str, float] | None = None,
     ):
         if max_depth < 1:
             raise ValueError(f"max_depth must be >= 1, got {max_depth}")
@@ -176,16 +190,30 @@ class AdmissionQueue:
             raise ValueError(
                 f"shed_threshold must be in [1, max_depth], got {shed_threshold}"
             )
+        if class_weights is not None:
+            for name, w in class_weights.items():
+                if not (w > 0):
+                    raise ValueError(
+                        f"class_weights[{name!r}] must be > 0, got {w}"
+                    )
         self.max_depth = max_depth
         self.shed_threshold = shed_threshold
         self.on_shed = on_shed
         self.metrics = metrics  # optional ServeMetrics: depth high-water marks
         self.tracer = tracer
+        self.class_weights = dict(class_weights) if class_weights else None
         self._lanes: dict[SLOClass, collections.deque[Request]] = {}
         self._depth = 0
         self._cond = threading.Condition()
         self._closed = False
         self._ids = itertools.count()
+        # DRR state (only used when class_weights is set): round-robin lane
+        # order, per-lane unspent credits, and whether the head lane's turn
+        # already received its quantum (a turn interrupted by max_items
+        # resumes with its remaining deficit instead of double-granting)
+        self._rr: collections.deque[SLOClass] = collections.deque()
+        self._deficits: dict[SLOClass, float] = {}
+        self._turn_granted = False
 
     def _shed_victim(self, priority: int) -> Request | None:
         """Pop the newest request of the lowest sheddable class below `priority`.
@@ -267,6 +295,8 @@ class AdmissionQueue:
             req.id = next(self._ids)
             lane = self._lanes.setdefault(slo, collections.deque())
             lane.append(req)
+            if self.class_weights is not None and slo not in self._rr:
+                self._rr.append(slo)
             self._depth += 1
             depth_after, lane_after = self._depth, len(lane)
             self._cond.notify()
@@ -314,12 +344,65 @@ class AdmissionQueue:
         self._depth -= 1
         return best
 
+    def _weight(self, slo: SLOClass) -> float:
+        """DRR weight of one class; classes not configured weigh 1.0."""
+        return self.class_weights.get(slo.name, 1.0)
+
+    def _pop_edf(self, lane: collections.deque[Request]) -> Request:
+        """Pop the earliest-deadline (then oldest) request of one lane."""
+        best = min(
+            lane,
+            key=lambda r: (
+                math.inf if r.deadline_t is None else r.deadline_t,
+                r.id,
+            ),
+        )
+        lane.remove(best)
+        self._depth -= 1
+        return best
+
+    def _drain_drr(self, max_items: int) -> list[Request]:
+        """Deficit-round-robin drain of up to max_items (under the lock).
+
+        Each lane's turn grants it `weight` credits; one credit releases one
+        request (EDF order within the lane).  Unspent deficit carries to the
+        lane's next turn; a lane drained empty forfeits its deficit (classic
+        DRR — credits never hoard while a class is idle).  Work-conserving:
+        the loop only stops when max_items is reached or the queue is empty,
+        so backlogged lanes always fill the whole allowance.
+        """
+        out: list[Request] = []
+        while self._depth and len(out) < max_items:
+            slo = self._rr[0]
+            lane = self._lanes.get(slo)
+            if not lane:
+                # lane went idle: drop it from rotation (re-added on submit)
+                self._deficits.pop(slo, None)
+                self._turn_granted = False
+                self._rr.popleft()
+                continue
+            if not self._turn_granted:
+                self._deficits[slo] = self._deficits.get(slo, 0.0) + self._weight(slo)
+                self._turn_granted = True
+            while lane and self._deficits[slo] >= 1.0 and len(out) < max_items:
+                out.append(self._pop_edf(lane))
+                self._deficits[slo] -= 1.0
+            if len(out) >= max_items and lane and self._deficits[slo] >= 1.0:
+                break  # turn interrupted: keep position + remaining deficit
+            if not lane:
+                self._deficits.pop(slo, None)
+            self._turn_granted = False
+            self._rr.rotate(-1)
+        return out
+
     def drain(self, max_items: int, timeout_s: float) -> list[Request]:
         """Pop up to max_items requests, blocking up to timeout_s for the first.
 
         Requests come out in drain order — priority descending, earliest
-        deadline first within a priority, then admission order.  Returns []
-        on timeout or when the queue is closed and empty.
+        deadline first within a priority, then admission order — or in
+        deficit-round-robin order when `class_weights` is set (per-class
+        share proportional to weight, EDF within a class).  Returns [] on
+        timeout or when the queue is closed and empty.
         """
         deadline = time.monotonic() + timeout_s
         with self._cond:
@@ -327,6 +410,8 @@ class AdmissionQueue:
                 remaining = deadline - time.monotonic()
                 if remaining <= 0 or not self._cond.wait(remaining):
                     break
+            if self.class_weights is not None:
+                return self._drain_drr(max_items)
             out = []
             while self._depth and len(out) < max_items:
                 out.append(self._pop_next())
@@ -341,6 +426,24 @@ class AdmissionQueue:
         """Waiting requests per SLO class name (autoscaler/operator signal)."""
         with self._cond:
             return {slo.name: len(lane) for slo, lane in self._lanes.items() if lane}
+
+    def slack_by_class(self, now: float | None = None) -> dict[str, float]:
+        """Tightest remaining deadline headroom per queued SLO class.
+
+        For each class with queued deadline-bearing requests, the minimum
+        of (deadline_t - now) over its lane — negative means the class's
+        earliest deadline already passed while queued.  Deadline-free
+        classes are absent.  The autoscaler's cost signal: shrinking slack
+        predicts a budget breach *before* anything expires.
+        """
+        now = time.monotonic() if now is None else now
+        with self._cond:
+            out: dict[str, float] = {}
+            for slo, lane in self._lanes.items():
+                slacks = [r.deadline_t - now for r in lane if r.deadline_t is not None]
+                if slacks:
+                    out[slo.name] = min(slacks)
+            return out
 
     @property
     def closed(self) -> bool:

@@ -27,17 +27,19 @@ residency, `rt.metrics.snapshot()` the hit rate and saved latency).
 from __future__ import annotations
 
 import dataclasses
+import threading
 
 import jax
 import numpy as np
 
 from repro.core.accelerator import get_accelerator
 from repro.core.policy import ExecutionPolicy, resolve_policy
+from repro.serve.adapt.controller import AdaptiveConfig, AdaptiveController
 from repro.serve.autoscaler import Autoscaler, AutoscalerConfig
 from repro.serve.dispatch import ReplicaPool
 from repro.serve.hashing import DEFAULT_QUANT_STEP
 from repro.serve.metrics import ServeMetrics
-from repro.serve.obs import Reporter
+from repro.serve.obs import MetricsServer, Reporter
 from repro.serve.preprocess_cache import CacheConfig, PreprocessCache
 from repro.serve.queue import AdmissionError, AdmissionQueue, Shed
 from repro.serve.scheduler import BatchScheduler, MicroBatch, SchedulerConfig, bucket_for
@@ -62,6 +64,21 @@ class RuntimeConfig:
     autoscaler attaches the replica autoscaling control loop
     (serve/autoscaler.py): fault-evicted replicas rejoin warm and the pool
     grows/shrinks with queue depth.
+    class_weights switches the queue drain from strict priority to
+    deficit-round-robin across SLO classes (serve/queue.py): each class gets
+    throughput proportional to its weight while EDF order holds within a
+    class; None keeps the legacy strict-priority drain.
+    oversize picks what happens to clouds larger than the biggest bucket:
+    "subsample" (default) serves them at the largest bucket via random
+    subsampling in pad_cloud, "reject" refuses them at submit with a
+    ValueError naming the bucket set.
+    prometheus_port attaches a live scrape endpoint (serve/obs.py
+    MetricsServer, GET /metrics + /healthz); 0 binds an ephemeral port
+    (read it from `rt.metrics_server.url`), None disables the listener.
+    adaptive attaches the feedback control loop (serve/adapt/): observed
+    size/arrival/occupancy distributions periodically retune buckets,
+    max_batch and per-class batching patience through the pause-free
+    warm-then-swap reconfiguration path.
     """
 
     max_batch: int = 8
@@ -83,6 +100,40 @@ class RuntimeConfig:
     autoscaler: AutoscalerConfig | None = None  # None = no control loop
     trace: TraceConfig | None = None  # None = tracing off (no tracer anywhere)
     report_interval_s: float | None = None  # periodic metrics reporter (None = off)
+    class_weights: tuple[tuple[str, float], ...] | None = None  # DRR drain
+    oversize: str = "subsample"  # or "reject": refuse clouds past max bucket
+    prometheus_port: int | None = None  # scrape endpoint (0 = ephemeral port)
+    prometheus_host: str = "127.0.0.1"
+    adaptive: AdaptiveConfig | None = None  # None = no feedback loop
+
+    def __post_init__(self):
+        if self.buckets is not None:
+            b = tuple(self.buckets)
+            if not b:
+                raise ValueError("buckets must be None or non-empty")
+            if any(int(x) != x or x < 1 for x in b):
+                raise ValueError(
+                    f"buckets must be positive integers, got {b}"
+                )
+            if any(b[i] >= b[i + 1] for i in range(len(b) - 1)):
+                # a silently-sorted or deduplicated bucket list hides a
+                # config typo that would otherwise change serving shapes
+                raise ValueError(
+                    f"buckets must be strictly increasing, got {b} "
+                    "(sort them and remove duplicates)"
+                )
+        if self.oversize not in ("subsample", "reject"):
+            raise ValueError(
+                f'oversize must be "subsample" or "reject", got {self.oversize!r}'
+            )
+        if self.class_weights is not None:
+            for name, w in self.class_weights:
+                if w <= 0:
+                    raise ValueError(
+                        f"class_weights[{name!r}] must be > 0, got {w}"
+                    )
+        if self.prometheus_port is not None and self.prometheus_port < 0:
+            raise ValueError("prometheus_port must be >= 0 or None")
 
 
 class ServingRuntime:
@@ -117,8 +168,11 @@ class ServingRuntime:
                 f"devices_per_replica={self.config.devices_per_replica}"
             )
         self.default_policy = resolve_policy(model_cfg, policy)
-        self.buckets = tuple(sorted(self.config.buckets or (model_cfg.n_points,)))
+        # validated strictly-increasing in RuntimeConfig.__post_init__ — a
+        # malformed bucket list fails loudly there instead of being sorted
+        self.buckets = tuple(self.config.buckets or (model_cfg.n_points,))
         self.metrics = ServeMetrics()
+        self._reconfig_lock = threading.Lock()
         # constructed FIRST: every downstream component takes the tracer (or
         # None — the single-branch off path) at construction
         self.tracer = (
@@ -138,6 +192,11 @@ class ServingRuntime:
         self.queue = AdmissionQueue(
             self.config.max_queue,
             shed_threshold=self.config.shed_threshold,
+            class_weights=(
+                dict(self.config.class_weights)
+                if self.config.class_weights is not None
+                else None
+            ),
             # full-queue evictions happen inside queue.submit, past the
             # runtime's admission accounting — the callback keeps the shed
             # counter (and the victim's class breakdown) truthful
@@ -159,7 +218,7 @@ class ServingRuntime:
         )
         self.autoscaler = (
             Autoscaler(self.pool, self.queue, self.config.autoscaler,
-                       tracer=self.tracer)
+                       tracer=self.tracer, metrics=self.metrics)
             if self.config.autoscaler is not None
             else None
         )
@@ -187,6 +246,20 @@ class ServingRuntime:
             if self.config.report_interval_s is not None
             else None
         )
+        self.controller = (
+            AdaptiveController(self, self.config.adaptive)
+            if self.config.adaptive is not None
+            else None
+        )
+        self.metrics_server = (
+            MetricsServer(
+                self.metrics,
+                host=self.config.prometheus_host,
+                port=self.config.prometheus_port,
+            )
+            if self.config.prometheus_port is not None
+            else None
+        )
         self._started = False
         self._stopped = False
 
@@ -206,8 +279,12 @@ class ServingRuntime:
             self.scheduler.start()
             if self.autoscaler is not None:
                 self.autoscaler.start()
+            if self.controller is not None:
+                self.controller.start()
             if self.reporter is not None:
                 self.reporter.start()
+            if self.metrics_server is not None:
+                self.metrics_server.start()
         return self
 
     def stop(self, drain: bool = True):
@@ -218,8 +295,14 @@ class ServingRuntime:
         than left hanging — without a scheduler nothing could complete it.
         """
         self._stopped = True
+        if self.metrics_server is not None:
+            self.metrics_server.stop()
         if self.reporter is not None:
             self.reporter.stop()
+        if self.controller is not None:
+            # stopped before the scheduler: a reconfigure racing shutdown
+            # would warm artifacts on a pool the shutdown below tears down
+            self.controller.stop()
         if self.autoscaler is not None:
             # stopped before the scheduler: a rejoin racing shutdown would
             # spin up a fresh replica the pool.shutdown() below never sees
@@ -265,6 +348,88 @@ class ServingRuntime:
                 self.pool.warmup(mb)
         return self
 
+    def reconfigure(
+        self,
+        *,
+        buckets: tuple[int, ...] | None = None,
+        max_batch: int | None = None,
+        max_wait_s: float | None = None,
+        class_max_wait: tuple[tuple[str, float], ...] | None = None,
+        policies: tuple[ExecutionPolicy | None, ...] = (None,),
+    ) -> int:
+        """Pause-free knob swap: warm new artifacts, then flip atomically.
+
+        Traffic keeps flowing throughout.  New (bucket x policy) artifacts
+        at the new (max_batch, bucket, width) shape are traced on every
+        alive replica FIRST (and registered for rejoin replay), then the
+        bucket list and a version-bumped `SchedulerConfig` are swapped in:
+        the drain loop reads its config exactly once per tick and a
+        request's bucket is fixed at admission, so no in-flight batch ever
+        mixes old and new shapes — old-bucket requests finish on the still-
+        cached old artifacts while new admissions use the new ones.
+
+        Returns the scheduler-config version the swap produced.  Serialized
+        by a lock: concurrent reconfigurations apply one at a time.
+        """
+        with self._reconfig_lock:
+            cur = self.scheduler.config
+            new_mb = cur.max_batch if max_batch is None else int(max_batch)
+            if new_mb < 1:
+                raise ValueError(f"max_batch must be >= 1, got {new_mb}")
+            if new_mb % self.config.devices_per_replica != 0:
+                raise ValueError(
+                    f"max_batch={new_mb} must be divisible by "
+                    f"devices_per_replica={self.config.devices_per_replica}"
+                )
+            if max_wait_s is not None and max_wait_s <= 0:
+                raise ValueError(f"max_wait_s must be > 0, got {max_wait_s}")
+            new_buckets = self.buckets
+            if buckets is not None:
+                b = tuple(int(x) for x in buckets)
+                if not b or any(x < 1 for x in b) or any(
+                    b[i] >= b[i + 1] for i in range(len(b) - 1)
+                ):
+                    raise ValueError(
+                        f"buckets must be non-empty, positive and strictly "
+                        f"increasing, got {b}"
+                    )
+                new_buckets = b
+            if class_max_wait is not None:
+                for name, w in class_max_wait:
+                    if w <= 0:
+                        raise ValueError(
+                            f"class_max_wait for {name!r} must be > 0, got {w}"
+                        )
+            if new_buckets != self.buckets or new_mb != cur.max_batch:
+                # warm BEFORE the swap so the first post-swap batch never
+                # pays compile latency; pool.warmup is synchronous on every
+                # alive replica and registers the shape for rejoin replay
+                width = 3 + self.model_cfg.in_features
+                for pol in policies:
+                    resolved = resolve_policy(self.model_cfg, pol)
+                    for bucket in new_buckets:
+                        self.pool.warmup(MicroBatch(
+                            requests=(),
+                            bucket=bucket,
+                            policy=resolved,
+                            batch=np.zeros((new_mb, bucket, width), np.float32),
+                            cache=self.cache if resolved.sharding is None else None,
+                        ))
+            # the swap: bucket list first (affects only NEW admissions —
+            # already-admitted requests carry their bucket), then the
+            # scheduler config in one atomic reference assignment
+            self.buckets = new_buckets
+            applied = self.scheduler.apply_config(dataclasses.replace(
+                cur,
+                max_batch=new_mb,
+                max_wait_s=cur.max_wait_s if max_wait_s is None else max_wait_s,
+                class_max_wait=(
+                    cur.class_max_wait if class_max_wait is None
+                    else tuple(class_max_wait)
+                ),
+            ))
+            return applied.version
+
     # -- traffic --------------------------------------------------------------
 
     def submit(
@@ -304,7 +469,15 @@ class ServingRuntime:
             # queue.submit applies slo.deadline_s itself when timeout_s
             # stays None
             timeout_s = self.config.default_timeout_s
-        bucket = bucket_for(cloud.shape[0], self.buckets)
+        buckets = self.buckets  # one read: stable across a concurrent swap
+        if self.config.oversize == "reject" and cloud.shape[0] > buckets[-1]:
+            raise ValueError(
+                f"cloud has {cloud.shape[0]} points but the largest bucket "
+                f"is {buckets[-1]} (buckets={buckets}); pass "
+                'oversize="subsample" to serve it at the largest bucket, '
+                "or add a bucket >= the cloud size"
+            )
+        bucket = bucket_for(cloud.shape[0], buckets)
         slo_name = slo.name if slo is not None else None
         # every request gets its trace id HERE (head sampling decides once;
         # None = untraced and no span event is ever emitted for it)
@@ -350,6 +523,7 @@ class ServingRuntime:
                 )
             raise
         self.metrics.record_submitted(slo_name)
+        self.metrics.record_arrival(cloud.shape[0], slo_name)
         return fut
 
     def infer(self, cloud: np.ndarray, **kwargs) -> np.ndarray:

@@ -64,7 +64,14 @@ from repro.serve.queue import (
 
 @dataclasses.dataclass(frozen=True)
 class SchedulerConfig:
-    """Dynamic-batching knobs: batch size, flush latency, drain granularity."""
+    """Dynamic-batching knobs: batch size, flush latency, drain granularity.
+
+    The config is VERSIONED and swapped atomically: the drain loop reads
+    `scheduler.config` exactly once per tick into a local, so every batch
+    of one tick is assembled under one consistent config — a live
+    reconfiguration (`BatchScheduler.apply_config`) can never produce a
+    batch that mixes the old `max_batch` shape with the new one.
+    """
 
     max_batch: int = 8  # static batch dim of every micro-batch
     max_wait_s: float = 0.005  # flush a partial batch after this long
@@ -74,6 +81,20 @@ class SchedulerConfig:
     # admission queue (where priority/EDF/shedding act) instead of the
     # replicas' FIFO executor queues (where nothing does)
     max_inflight: int | None = None
+    # monotonically increasing on every live reconfiguration; batches and
+    # decision logs reference the version their knobs came from
+    version: int = 0
+    # per-class partial-flush wait overrides from the adaptive controller,
+    # (class name, seconds) pairs — tighter of this and SLOClass.max_wait_s
+    # wins; a hashable tuple so the config stays frozen/comparable
+    class_max_wait: tuple[tuple[str, float], ...] = ()
+
+    def wait_for_class(self, name: str) -> float | None:
+        """The configured per-class wait override for `name`, or None."""
+        for cls_name, wait_s in self.class_max_wait:
+            if cls_name == name:
+                return wait_s
+        return None
 
 
 @dataclasses.dataclass(frozen=True, eq=False)  # identity hash: lives in sets
@@ -224,6 +245,21 @@ class BatchScheduler:
         self._thread.start()
         return self
 
+    def apply_config(self, config: SchedulerConfig) -> SchedulerConfig:
+        """Atomically swap the scheduler config for the next drain tick.
+
+        The drain loop reads `self.config` once per tick, so the swap is a
+        single reference assignment: batches formed before the swap complete
+        under the old config, batches formed after use the new one, and no
+        batch ever mixes the two (the pause-free reconfiguration path —
+        warm the new artifacts first, then call this).  Returns the applied
+        config (its `version` is forced past the current one).
+        """
+        if config.version <= self.config.version:
+            config = dataclasses.replace(config, version=self.config.version + 1)
+        self.config = config
+        return config
+
     def stop(self, drain: bool = True):
         """Stop the drain loop.
 
@@ -253,34 +289,38 @@ class BatchScheduler:
 
     # -- drain loop -----------------------------------------------------------
 
-    def _budget(self) -> int | None:
+    def _budget(self, cfg: SchedulerConfig) -> int | None:
         """Batches the scheduler may still dispatch right now (None = ∞)."""
-        if self.config.max_inflight is None:
+        if cfg.max_inflight is None:
             return None
         with self._inflight_cond:
-            return self.config.max_inflight - len(self._inflight)
+            return cfg.max_inflight - len(self._inflight)
 
     def _run(self):
-        cfg = self.config
         while not self._stop.is_set():
+            # ONE config read per tick: apply_config swaps the reference
+            # atomically, so everything this iteration does — drain size,
+            # flush thresholds, batch assembly shape — sees one consistent
+            # config and never a half-applied reconfiguration
+            cfg = self.config
             # the drain thread must survive anything a single bad request can
             # throw (it serves every OTHER request too) — _dispatch already
             # fails the affected batch; this is the last-resort guard
             try:
-                budget = self._budget()
+                budget = self._budget(cfg)
                 if budget is not None and budget <= 0:
                     # replicas saturated: leave the backlog in the admission
                     # queue — draining it now would freeze its priority order
                     # into FIFO executor queues.  Wake when a batch finishes
                     with self._inflight_cond:
-                        if len(self._inflight) >= self.config.max_inflight:
+                        if len(self._inflight) >= cfg.max_inflight:
                             self._inflight_cond.wait(cfg.drain_tick_s)
                     continue
                 reqs = self.queue.drain(cfg.max_batch, cfg.drain_tick_s)
                 if reqs:
                     self.metrics.record_queue_depth(self.queue.depth() + len(reqs))
                 self._admit(reqs)
-                self._flush_ready()
+                self._flush_ready(cfg)
             except Exception:  # noqa: BLE001
                 self.metrics.record_failed()
 
@@ -309,50 +349,72 @@ class BatchScheduler:
                 )
 
     def _key_order(self, key: tuple) -> tuple:
-        """Flush order of pending keys: higher-priority classes first."""
+        """Flush order of pending keys.
+
+        Strict-priority mode: higher-priority classes first.  DRR mode
+        (queue has class_weights): oldest drained request first — the
+        weighted share is already encoded in the queue's drain order, and
+        a priority sort here would hand every scarce dispatch slot back to
+        the high class, re-starving the lanes DRR just protected.
+        """
+        if getattr(self.queue, "class_weights", None) is not None:
+            lst = self._pending.get(key)
+            return (min(r.id for r in lst) if lst else float("inf"),)
         return (-key[2].priority, key[2].name)
 
-    def _max_wait(self, key: tuple) -> float:
-        """Partial-batch flush wait for one key — per-class bound applied."""
-        slo_wait = key[2].max_wait_s
-        if slo_wait is None:
-            return self.config.max_wait_s
-        return min(self.config.max_wait_s, slo_wait)
+    def _max_wait(self, key: tuple, cfg: SchedulerConfig) -> float:
+        """Partial-batch flush wait for one key — per-class bounds applied.
 
-    def _flush_ready(self):
+        The tightest of: the global `max_wait_s`, the class's own
+        `SLOClass.max_wait_s`, and the adaptive controller's per-class
+        override in `cfg.class_max_wait`.
+        """
+        wait = cfg.max_wait_s
+        slo_wait = key[2].max_wait_s
+        if slo_wait is not None:
+            wait = min(wait, slo_wait)
+        override = cfg.wait_for_class(key[2].name)
+        if override is not None:
+            wait = min(wait, override)
+        return wait
+
+    def _flush_ready(self, cfg: SchedulerConfig):
         now = time.monotonic()
-        budget = self._budget()
+        budget = self._budget(cfg)
         for key in sorted(self._pending, key=self._key_order):
             # priority-first AND budget-aware: when capacity is scarce the
             # highest class takes the remaining dispatch slots
             if budget is not None and budget <= 0:
                 return
             lst = self._pending[key]
-            while len(lst) >= self.config.max_batch and (budget is None or budget > 0):
-                chunk, self._pending[key] = lst[: self.config.max_batch], lst[self.config.max_batch :]
+            while len(lst) >= cfg.max_batch and (budget is None or budget > 0):
+                chunk, self._pending[key] = lst[: cfg.max_batch], lst[cfg.max_batch :]
                 lst = self._pending[key]
-                self._dispatch(key, chunk)
+                self._dispatch(key, chunk, cfg)
                 if budget is not None:
                     budget -= 1
             if (
                 lst
                 and (budget is None or budget > 0)
-                and now - lst[0].submit_t >= self._max_wait(key)
+                and now - lst[0].submit_t >= self._max_wait(key, cfg)
             ):
                 self._pending[key] = []
-                self._dispatch(key, lst)
+                self._dispatch(key, lst, cfg)
                 if budget is not None:
                     budget -= 1
 
     def _flush_all(self):
         # stop-time drain: the inflight bound is deliberately ignored — the
         # runtime is closing, the only goal is completing what was admitted
+        cfg = self.config
         for key in sorted(self._pending, key=self._key_order):
             lst, self._pending[key] = self._pending[key], []
-            for lo in range(0, len(lst), self.config.max_batch):
-                self._dispatch(key, lst[lo : lo + self.config.max_batch])
+            for lo in range(0, len(lst), cfg.max_batch):
+                self._dispatch(key, lst[lo : lo + cfg.max_batch], cfg)
 
-    def _dispatch(self, key: tuple, requests: list[Request]):
+    def _dispatch(self, key: tuple, requests: list[Request], cfg: SchedulerConfig | None = None):
+        if cfg is None:
+            cfg = self.config
         # shed what expired (or was cancelled) while waiting in _pending —
         # deadlines are re-checked at every stage, not just admission
         now = time.monotonic()
@@ -417,7 +479,7 @@ class BatchScheduler:
                     for req, ent in zip(live, entries)
                 ]
             batch = assemble_batch(
-                live, bucket, self.width, self.config.max_batch, rows=rows
+                live, bucket, self.width, cfg.max_batch, rows=rows
             )
         except Exception as e:  # noqa: BLE001 — one bad cloud fails ITS batch only
             self.metrics.record_failed(len(live))

@@ -39,11 +39,12 @@ import time
 
 # --------------------------------------------------------------------------
 # Event-name registry.  CLOSED: every name emitted anywhere in repro.serve
-# must be declared here exactly once (tests/test_trace.py grep-enforces
-# both directions).  Names are "<scope>.<edge>"; scopes are:
+# (subpackages included) must be declared here exactly once
+# (tests/test_trace.py grep-enforces both directions).  Names are
+# "<scope>.<edge>"; scopes are:
 #   request.* — events on one request's span (trace_id set)
 #   batch.*   — events on one micro-batch's span (batch_id set)
-#   replica.* / scale.* / chaos.* / cache.* — control-plane stream
+#   replica.* / scale.* / chaos.* / cache.* / adapt.* — control-plane stream
 # --------------------------------------------------------------------------
 EVENTS: tuple[str, ...] = (
     # request lifecycle
@@ -89,6 +90,10 @@ EVENTS: tuple[str, ...] = (
     "chaos.slow",
     "cache.insert",
     "cache.evict",
+    # adaptive control plane (serve/adapt): knob proposals and actuations
+    "adapt.propose",
+    "adapt.apply",
+    "adapt.rollback",
 )
 
 _EVENT_SET = frozenset(EVENTS)

@@ -1,0 +1,725 @@
+"""Adaptive control-plane tests: DRR weighted-fair drain, pause-free
+reconfiguration, the AdaptiveController feedback loop, cost-signal
+autoscaling, config validation, and the live Prometheus endpoint.
+
+Layered like the subsystem: the DRR drain and the knob-proposal math are
+pinned as pure properties (hypothesis cross-checks the weighted-share and
+EDF-within-class invariants on random traffic); the AdaptiveController units
+run against a fake runtime so proposal/hysteresis/rollback logic is
+deterministic; and the integration tests drive a real ServingRuntime
+through a mid-stream `reconfigure` asserting zero loss and bitwise parity
+against direct accelerator references.  All waits are bounded
+(tests/_timing.py) so failures surface as assertions, never hangs.
+"""
+
+import dataclasses
+import time
+import urllib.error
+import urllib.request
+from types import SimpleNamespace
+
+import jax
+import numpy as np
+import pytest
+from _hypothesis import given, settings, st
+from _timing import time_mult, wait_until
+
+from repro.configs.base import get_config
+from repro.core.accelerator import get_accelerator
+from repro.core.policy import ExecutionPolicy
+from repro.serve import (
+    BULK,
+    INTERACTIVE,
+    AdaptiveConfig,
+    AdaptiveController,
+    AdmissionQueue,
+    Autoscaler,
+    AutoscalerConfig,
+    Histogram,
+    MetricsServer,
+    RuntimeConfig,
+    SchedulerConfig,
+    ServeMetrics,
+    ServingRuntime,
+    SLOClass,
+    interarrival_mean,
+    pad_cloud,
+    padding_waste,
+    propose_buckets,
+    propose_wait,
+)
+from repro.serve.metrics import BatchRecord
+
+jax.config.update("jax_platform_name", "cpu")
+
+WAIT_S = 60 * time_mult()
+CLOUD = np.zeros((8, 3), np.float32)
+POL = ExecutionPolicy()
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return get_config("pointnet2-cls", smoke=True)  # n_points=256
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    return get_accelerator(cfg).init(jax.random.PRNGKey(0))
+
+
+# -- proposal math (pure units) -----------------------------------------------
+
+
+class TestHistogram:
+    def test_counts_and_mean(self):
+        h = Histogram()
+        h.extend([100, 100, 200, 300])
+        assert len(h) == 4
+        assert h.mean() == pytest.approx(175.0)
+
+    def test_quantile_reads_empirical_cdf(self):
+        h = Histogram()
+        h.add(10, count=9)
+        h.add(1000)
+        assert h.quantile(0.5) == 10
+        assert h.quantile(0.9) == 10
+        assert h.quantile(1.0) == 1000
+
+    def test_rejects_nonpositive_and_empty(self):
+        h = Histogram()
+        with pytest.raises(ValueError, match="> 0"):
+            h.add(0)
+        with pytest.raises(ValueError, match="empty"):
+            h.quantile(0.5)
+        with pytest.raises(ValueError, match="q must be"):
+            Histogram().quantile(1.5)
+        assert h.mean() == 0.0
+
+
+class TestProposalMath:
+    def test_padding_waste_exact(self):
+        # sizes 64 and 128 at a single 128 bucket: rows 64..127 are filler
+        # for the first cloud, none for the second
+        waste = padding_waste(np.array([64, 128]), (128,))
+        assert waste == pytest.approx(((128 - 64) / 128 + 0.0) / 2)
+        assert padding_waste(np.array([], np.int64), (128,)) == 0.0
+        # oversized clouds subsample to the top bucket: no padding waste
+        assert padding_waste(np.array([999]), (128,)) == 0.0
+
+    def test_propose_buckets_quantiles_align_and_envelope(self):
+        sizes = np.array([90] * 50 + [250] * 50)
+        got = propose_buckets(sizes, 2, align=32, min_bucket=64, max_bucket=256)
+        assert got[-1] == 256  # envelope always kept
+        assert all(b % 32 == 0 for b in got)
+        assert got[0] == 96  # ceil(90 / 32) * 32
+        assert got == tuple(sorted(set(got)))
+
+    def test_propose_buckets_clamps_and_validates(self):
+        assert propose_buckets(np.array([5, 7]), 2, align=32,
+                               min_bucket=64, max_bucket=256) == (64, 256)
+        assert propose_buckets(np.array([], np.int64), 2, align=32,
+                               min_bucket=64, max_bucket=256) == (256,)
+        with pytest.raises(ValueError, match="n_buckets"):
+            propose_buckets(np.array([1]), 0, min_bucket=1, max_bucket=2)
+        with pytest.raises(ValueError, match="min_bucket"):
+            propose_buckets(np.array([1]), 1, min_bucket=8, max_bucket=4)
+
+    def test_interarrival_and_wait(self):
+        assert interarrival_mean(np.array([1.0])) is None
+        gap = interarrival_mean(np.array([0.0, 0.01, 0.02, 0.03]))
+        assert gap == pytest.approx(0.01)
+        # fill time for a batch of 4 at 10ms gaps = 30ms, clamped to 50ms cap
+        assert propose_wait(gap, 4, bounds=(0.001, 0.05)) == pytest.approx(0.03)
+        assert propose_wait(gap, 100, bounds=(0.001, 0.05)) == 0.05
+        assert propose_wait(1e-9, 4, bounds=(0.001, 0.05)) == 0.001
+        assert propose_wait(None, 4, bounds=(0.001, 0.05)) is None
+
+
+# -- DRR weighted-fair drain --------------------------------------------------
+
+
+def _fill(q, slo, k, timeout_s=None):
+    for _ in range(k):
+        q.submit(CLOUD, bucket=256, policy=POL, slo=slo, timeout_s=timeout_s)
+
+
+class TestDRRDrain:
+    def test_weight_validation(self):
+        with pytest.raises(ValueError, match="class_weights"):
+            AdmissionQueue(8, class_weights={"bulk": 0.0})
+        with pytest.raises(ValueError, match="class_weights"):
+            RuntimeConfig(class_weights=(("bulk", -1.0),))
+
+    def test_share_tracks_weights_under_backlog(self):
+        q = AdmissionQueue(512, class_weights={"interactive": 4.0, "bulk": 1.0})
+        _fill(q, INTERACTIVE, 200)
+        _fill(q, BULK, 200)
+        drained = []
+        while len(drained) < 100:
+            got = q.drain(5, timeout_s=0.0)
+            assert len(got) == 5  # work-conserving: full allowance every call
+            drained.extend(got)
+        n_inter = sum(1 for r in drained if r.slo is INTERACTIVE)
+        n_bulk = len(drained) - n_inter
+        # both lanes stayed backlogged for the whole window, so the shares
+        # must converge to the 4:1 weights (classic DRR deviation bound:
+        # within one quantum per lane of the ideal share)
+        assert abs(n_inter - 80) <= 5
+        assert abs(n_bulk - 20) <= 5
+
+    def test_edf_order_within_class(self):
+        q = AdmissionQueue(64, class_weights={"interactive": 2.0, "bulk": 1.0})
+        rng = np.random.default_rng(0)
+        for t in rng.permutation([5.0, 1.0, 9.0, 3.0, 7.0]):
+            q.submit(CLOUD, bucket=256, policy=POL, slo=INTERACTIVE,
+                     timeout_s=float(t))
+        out = q.drain(5, timeout_s=0.0)
+        deadlines = [r.deadline_t for r in out]
+        assert deadlines == sorted(deadlines)
+
+    def test_idle_lane_forfeits_deficit(self):
+        q = AdmissionQueue(64, class_weights={"interactive": 8.0, "bulk": 1.0})
+        _fill(q, INTERACTIVE, 2)
+        _fill(q, BULK, 8)
+        assert len(q.drain(10, timeout_s=0.0)) == 10  # nothing stranded
+        # the interactive lane went idle after 2; its 6 unspent credits must
+        # NOT persist: refill both lanes and check bulk still gets served
+        _fill(q, INTERACTIVE, 16)
+        _fill(q, BULK, 16)
+        got = q.drain(9, timeout_s=0.0)
+        assert sum(1 for r in got if r.slo is BULK) >= 1
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        w_inter=st.integers(min_value=1, max_value=8),
+        w_bulk=st.integers(min_value=1, max_value=8),
+        chunk=st.integers(min_value=1, max_value=7),
+        seed=st.integers(min_value=0, max_value=2**16),
+    )
+    def test_property_share_and_edf(self, w_inter, w_bulk, chunk, seed):
+        """Share converges to weights and EDF holds within each class."""
+        total = 60
+        q = AdmissionQueue(
+            1024,
+            class_weights={"interactive": float(w_inter), "bulk": float(w_bulk)},
+        )
+        rng = np.random.default_rng(seed)
+        for t in rng.uniform(1.0, 100.0, size=200):
+            q.submit(CLOUD, bucket=256, policy=POL, slo=INTERACTIVE,
+                     timeout_s=float(t))
+        _fill(q, BULK, 200)
+        drained = []
+        while len(drained) < total:
+            got = q.drain(min(chunk, total - len(drained)), timeout_s=0.0)
+            assert got, "work-conserving: backlog present but drain empty"
+            drained.extend(got)
+        n_inter = sum(1 for r in drained if r.slo is INTERACTIVE)
+        ideal = total * w_inter / (w_inter + w_bulk)
+        # DRR deviation bound: one quantum per lane per round plus the
+        # chunk-boundary effects; generous but weight-sensitive
+        assert abs(n_inter - ideal) <= 2 * max(w_inter, w_bulk) + chunk
+        inter_deadlines = [r.deadline_t for r in drained if r.slo is INTERACTIVE]
+        assert inter_deadlines == sorted(inter_deadlines)
+        bulk_ids = [r.id for r in drained if r.slo is BULK]
+        assert bulk_ids == sorted(bulk_ids)  # no deadlines: admission order
+
+    def test_starvation_bounded_under_extreme_weights(self):
+        q = AdmissionQueue(512, class_weights={"interactive": 100.0, "bulk": 1.0})
+        _fill(q, INTERACTIVE, 250)
+        _fill(q, BULK, 20)
+        drained = []
+        while len(drained) < 210:
+            drained.extend(q.drain(10, timeout_s=0.0))
+        assert any(r.slo is BULK for r in drained)  # never fully starved
+
+
+# -- RuntimeConfig validation + oversize policy --------------------------------
+
+
+class TestRuntimeConfigValidation:
+    @pytest.mark.parametrize(
+        "buckets", [(256, 128), (128, 128), (0, 128), (-5,), (128.5,), ()]
+    )
+    def test_malformed_buckets_rejected(self, buckets):
+        with pytest.raises(ValueError, match="buckets"):
+            RuntimeConfig(buckets=buckets)
+
+    def test_valid_buckets_kept_in_order(self):
+        assert RuntimeConfig(buckets=(64, 128, 256)).buckets == (64, 128, 256)
+
+    def test_oversize_value_checked(self):
+        with pytest.raises(ValueError, match="oversize"):
+            RuntimeConfig(oversize="drop")
+
+    def test_prometheus_port_checked(self):
+        with pytest.raises(ValueError, match="prometheus_port"):
+            RuntimeConfig(prometheus_port=-1)
+
+    def test_oversize_reject_names_buckets(self, cfg, params):
+        rt = ServingRuntime(
+            cfg, params,
+            RuntimeConfig(buckets=(64, 128), oversize="reject"),
+        )
+        try:
+            with pytest.raises(ValueError, match=r"buckets=\(64, 128\)"):
+                rt.submit(np.zeros((200, 3), np.float32))
+            # at or below the largest bucket admission still works
+            rt.submit(np.zeros((128, 3), np.float32))
+        finally:
+            rt.stop()
+
+
+# -- pause-free reconfiguration -----------------------------------------------
+
+
+class TestSchedulerApplyConfig:
+    def test_version_forced_monotonic(self):
+        base = SchedulerConfig(max_batch=4)
+        sched = SimpleNamespace(config=base)
+        # exercise the real method against a bare holder object
+        from repro.serve.scheduler import BatchScheduler
+
+        applied = BatchScheduler.apply_config(
+            sched, dataclasses.replace(base, max_batch=8)
+        )
+        assert applied.version == 1 and sched.config.max_batch == 8
+        applied2 = BatchScheduler.apply_config(
+            sched, dataclasses.replace(base, version=0)
+        )
+        assert applied2.version == 2  # stale version cannot rewind
+
+    def test_wait_for_class(self):
+        sc = SchedulerConfig(class_max_wait=(("interactive", 0.002),))
+        assert sc.wait_for_class("interactive") == 0.002
+        assert sc.wait_for_class("bulk") is None
+
+    def test_flush_order_follows_drain_order_under_drr(self):
+        # priority-first flush would re-starve the lanes DRR protected:
+        # with class_weights set, keys must flush oldest-drained-first
+        from repro.serve.scheduler import BatchScheduler
+
+        hi, lo = SLOClass("hi", priority=10), SLOClass("lo", priority=-10)
+        key_hi, key_lo = (256, (), hi), (256, (), lo)
+        sched = SimpleNamespace(
+            queue=SimpleNamespace(class_weights={"hi": 4.0, "lo": 1.0}),
+            _pending={
+                key_hi: [SimpleNamespace(id=7)],
+                key_lo: [SimpleNamespace(id=3)],
+            },
+        )
+        order = sorted(sched._pending, key=lambda k: BatchScheduler._key_order(sched, k))
+        assert order == [key_lo, key_hi]  # id 3 drained before id 7
+        sched.queue.class_weights = None  # strict-priority mode unchanged
+        order = sorted(sched._pending, key=lambda k: BatchScheduler._key_order(sched, k))
+        assert order == [key_hi, key_lo]
+
+
+class TestRuntimeReconfigure:
+    def test_validation(self, cfg, params):
+        rt = ServingRuntime(cfg, params, RuntimeConfig(max_batch=4))
+        try:
+            with pytest.raises(ValueError, match="buckets"):
+                rt.reconfigure(buckets=(256, 128))
+            with pytest.raises(ValueError, match="max_batch"):
+                rt.reconfigure(max_batch=0)
+            with pytest.raises(ValueError, match="max_wait_s"):
+                rt.reconfigure(max_wait_s=0.0)
+            with pytest.raises(ValueError, match="class_max_wait"):
+                rt.reconfigure(class_max_wait=(("bulk", -1.0),))
+        finally:
+            rt.stop()
+
+    def test_midstream_swap_no_loss_bitwise_parity(self, cfg, params):
+        """Reconfigure under live traffic: every future resolves exactly
+        once and every response is bitwise-equal to a direct accelerator
+        reference at one of the candidate buckets."""
+        max_batch = 4
+        rt = ServingRuntime(
+            cfg, params,
+            RuntimeConfig(max_batch=max_batch, max_wait_s=0.002,
+                          max_queue=256, buckets=(256,)),
+        )
+        accel = get_accelerator(cfg)
+        rng = np.random.default_rng(7)
+        clouds = [
+            rng.standard_normal((int(n), 3)).astype(np.float32)
+            for n in rng.choice([128, 256], size=30)
+        ]
+        # a mid-swap 128-point cloud may legitimately land in either the
+        # old 256 bucket (padded) or the new 128 bucket — precompute the
+        # reference for every candidate (row-independent model: a zero
+        # batch with the fitted cloud in row 0 gives that request's row)
+        refs = []
+        for c in clouds:
+            per_bucket = {}
+            for b in (128, 256):
+                if c.shape[0] <= b:
+                    batch = np.zeros((max_batch, b, 3), np.float32)
+                    batch[0] = pad_cloud(c, b)[0]
+                    per_bucket[b] = np.asarray(accel.infer(params, batch))[0]
+            refs.append(per_bucket)
+        try:
+            rt.start()
+            rt.warmup()
+            futs = []
+            version = None
+            for i, c in enumerate(clouds):
+                if i == len(clouds) // 2:
+                    version = rt.reconfigure(buckets=(128, 256))
+                futs.append(rt.submit(c))
+                time.sleep(0.001)
+            assert version is not None and version >= 1
+            assert rt.buckets == (128, 256)
+            results = [f.result(timeout=WAIT_S) for f in futs]
+        finally:
+            rt.stop()
+        assert len(results) == len(clouds)  # nothing lost across the swap
+        for res, per_bucket in zip(results, refs):
+            assert any(
+                np.array_equal(res, ref) for ref in per_bucket.values()
+            ), "response does not match any candidate-bucket reference"
+        snap = rt.metrics.snapshot()
+        assert snap.completed == len(clouds)
+        assert snap.rejected == snap.shed == 0
+
+
+# -- AdaptiveController units (fake runtime) -----------------------------------
+
+
+class _FakeScheduler:
+    def __init__(self, config):
+        self.config = config
+
+
+class _FakeRuntime:
+    """Just enough ServingRuntime surface for controller unit tests."""
+
+    def __init__(self, buckets=(256,), max_batch=4, depth=0):
+        self.metrics = ServeMetrics()
+        self.buckets = tuple(buckets)
+        self.scheduler = _FakeScheduler(SchedulerConfig(max_batch=max_batch))
+        self.queue = SimpleNamespace(depth=lambda: depth)
+        self.tracer = None
+        self.calls = []
+        self.fail_reconfigure = False
+
+    def reconfigure(self, **kw):
+        if self.fail_reconfigure:
+            raise RuntimeError("injected reconfigure failure")
+        self.calls.append(kw)
+        if "buckets" in kw:
+            self.buckets = tuple(kw["buckets"])
+        cfg = self.scheduler.config
+        self.scheduler.config = dataclasses.replace(
+            cfg,
+            version=cfg.version + 1,
+            **{k: v for k, v in kw.items()
+               if k in ("max_batch", "max_wait_s", "class_max_wait")},
+        )
+        return self.scheduler.config.version
+
+
+def _feed_sizes(rt, sizes):
+    for s in sizes:
+        rt.metrics.record_arrival(int(s))
+
+
+class TestAdaptiveConfigValidation:
+    def test_bounds_checked(self):
+        with pytest.raises(ValueError, match="occupancy"):
+            AdaptiveConfig(occupancy_low=0.9, occupancy_high=0.5)
+        with pytest.raises(ValueError, match="rollback_factor"):
+            AdaptiveConfig(rollback_factor=1.0)
+        with pytest.raises(ValueError, match="max_batch_bounds"):
+            AdaptiveConfig(max_batch_bounds=(0, 4))
+        with pytest.raises(ValueError, match="wait_bounds"):
+            AdaptiveConfig(wait_bounds=(0.0, 0.1))
+        with pytest.raises(ValueError, match="min_samples"):
+            AdaptiveConfig(min_samples=0)
+
+
+class TestAdaptiveController:
+    def _ctrl(self, rt, **kw):
+        kw.setdefault("min_samples", 32)
+        kw.setdefault("min_bucket", 64)
+        kw.setdefault("cooldown_s", 0.0)
+        kw.setdefault("tune_max_batch", False)
+        kw.setdefault("tune_wait", False)
+        return AdaptiveController(rt, AdaptiveConfig(**kw))
+
+    def test_silent_below_min_samples(self):
+        rt = _FakeRuntime()
+        ctrl = self._ctrl(rt)
+        _feed_sizes(rt, [100] * 10)
+        ctrl.poll_once()
+        assert len(ctrl.decisions) == 0 and rt.calls == []
+
+    def test_bucket_proposal_applied_with_evidence(self):
+        rt = _FakeRuntime(buckets=(256,))
+        ctrl = self._ctrl(rt)
+        _feed_sizes(rt, [100] * 100)
+        ctrl.poll_once()
+        (d,) = ctrl.decisions.applied("buckets")
+        assert rt.buckets == d.value and 128 in d.value and 256 in d.value
+        assert d.previous == (256,)
+        assert d.evidence["waste_current"] > d.evidence["waste_proposed"]
+        assert d.version == 1
+        assert rt.calls == [{"buckets": d.value}]
+
+    def test_hysteresis_rejects_small_gain_once(self):
+        rt = _FakeRuntime(buckets=(256,))
+        ctrl = self._ctrl(rt, waste_improvement=10.0)  # unreachable gain
+        _feed_sizes(rt, [100] * 100)
+        ctrl.poll_once()
+        ctrl.poll_once()  # identical rejection must not be re-logged
+        assert rt.calls == []
+        rejections = [d for d in ctrl.decisions.all() if not d.applied]
+        assert len(rejections) == 1 and rejections[0].kind == "buckets"
+        assert "hysteresis" in rejections[0].reason
+
+    def test_verify_window_blocks_new_actuations(self):
+        rt = _FakeRuntime(buckets=(256,))
+        ctrl = self._ctrl(rt, observe_s=60.0)
+        _feed_sizes(rt, [100] * 100)
+        ctrl.poll_once()
+        assert len(rt.calls) == 1
+        ctrl.poll_once()  # inside the observation window: frozen
+        assert len(rt.calls) == 1
+
+    def test_rollback_on_p95_regression(self):
+        rt = _FakeRuntime(buckets=(256,))
+        ctrl = self._ctrl(rt, observe_s=0.5, rollback_factor=1.5,
+                          min_window_completions=16)
+        for _ in range(20):
+            rt.metrics.record_completed(0.001)
+        _feed_sizes(rt, [100] * 100)
+        ctrl.poll_once()
+        assert rt.buckets != (256,)
+        for _ in range(30):
+            rt.metrics.record_completed(0.1)  # the swap made things worse
+        # expire the observation window by rewinding the applied timestamp
+        t, revert, pre = ctrl._pending_verify
+        ctrl._pending_verify = (t - 10.0, revert, pre)
+        ctrl.poll_once()
+        (rb,) = ctrl.decisions.applied("rollback")
+        assert rb.evidence["post_p95_s"] > rb.evidence["pre_p95_s"]
+        assert rt.buckets == (256,)  # knobs restored
+
+    def test_verify_keeps_healthy_swap(self):
+        rt = _FakeRuntime(buckets=(256,))
+        ctrl = self._ctrl(rt, observe_s=0.5)
+        for _ in range(20):
+            rt.metrics.record_completed(0.001)
+        _feed_sizes(rt, [100] * 100)
+        ctrl.poll_once()
+        for _ in range(30):
+            rt.metrics.record_completed(0.001)  # post-swap p95 unchanged
+        t, revert, pre = ctrl._pending_verify
+        ctrl._pending_verify = (t - 10.0, revert, pre)
+        ctrl.poll_once()
+        assert ctrl.decisions.applied("rollback") == ()
+        assert rt.buckets != (256,)  # swap survives
+
+    def test_max_batch_grows_on_occupancy_and_backlog(self):
+        rt = _FakeRuntime(buckets=(256,), max_batch=4, depth=16)
+        ctrl = self._ctrl(rt, tune_max_batch=True, min_batch_records=8)
+        _feed_sizes(rt, [256] * 64)  # sizes match the bucket: no bucket move
+        for _ in range(10):
+            rt.metrics.record_batch(
+                BatchRecord(bucket=256, policy_key=(), n_real=4,
+                            batch_size=4, replica_id=0, duration_s=0.01)
+            )
+        ctrl.poll_once()
+        (d,) = ctrl.decisions.applied("max_batch")
+        assert d.value == 8 and d.previous == 4
+        assert rt.scheduler.config.max_batch == 8
+        assert d.evidence["occupancy"] == pytest.approx(1.0)
+
+    def test_max_batch_shrinks_on_low_occupancy(self):
+        rt = _FakeRuntime(buckets=(256,), max_batch=8, depth=0)
+        ctrl = self._ctrl(rt, tune_max_batch=True, min_batch_records=8)
+        _feed_sizes(rt, [256] * 64)
+        for _ in range(10):
+            rt.metrics.record_batch(
+                BatchRecord(bucket=256, policy_key=(), n_real=1,
+                            batch_size=8, replica_id=0, duration_s=0.01)
+            )
+        ctrl.poll_once()
+        (d,) = ctrl.decisions.applied("max_batch")
+        assert d.value == 4 and rt.scheduler.config.max_batch == 4
+
+    def test_wait_tuning_sets_class_override(self):
+        rt = _FakeRuntime(buckets=(256,), max_batch=4)
+        ctrl = self._ctrl(rt, tune_wait=True)
+        for _ in range(64):
+            rt.metrics.record_arrival(256, "interactive")
+        ctrl.poll_once()
+        (d,) = ctrl.decisions.applied("max_wait")
+        overrides = dict(d.value)
+        assert "interactive" in overrides
+        assert rt.scheduler.config.wait_for_class("interactive") == pytest.approx(
+            overrides["interactive"]
+        )
+
+    def test_errors_never_escape(self):
+        rt = _FakeRuntime(buckets=(256,))
+        rt.fail_reconfigure = True
+        ctrl = self._ctrl(rt)
+        _feed_sizes(rt, [100] * 100)
+        ctrl.poll_once()  # must not raise
+        (d,) = ctrl.decisions.all()
+        assert d.kind == "error" and "injected" in d.reason
+
+
+# -- cost-signal autoscaling ---------------------------------------------------
+
+
+class _CostReplica:
+    def __init__(self, rid):
+        self.id = rid
+        self.alive = True
+        self.retired = False
+        self.evicted_t = None
+
+
+class _CostPool:
+    def __init__(self, n=1):
+        self.replicas = [_CostReplica(i) for i in range(n)]
+
+    def alive_replicas(self):
+        return [r for r in self.replicas if r.alive]
+
+    def add_replica(self):
+        rid = len(self.replicas)
+        self.replicas.append(_CostReplica(rid))
+        return rid
+
+    def rejoin(self, rid):
+        self.replicas[rid].alive = True
+        self.replicas[rid].retired = False
+        return True
+
+    def retire(self, rid):
+        self.replicas[rid].alive = False
+        self.replicas[rid].retired = True
+        return True
+
+
+class _CostQueue:
+    def __init__(self, depth=0, slack=None):
+        self._depth = depth
+        self._slack = slack or {}
+
+    def depth(self):
+        return self._depth
+
+    def slack_by_class(self, now=None):
+        return dict(self._slack)
+
+
+class TestAutoscalerCostSignals:
+    def test_config_validation(self):
+        with pytest.raises(ValueError, match="slack_scale_up_s"):
+            AutoscalerConfig(slack_scale_up_s=0.0)
+        with pytest.raises(ValueError, match="shed_scale_up_rate"):
+            AutoscalerConfig(shed_scale_up_rate=-1.0)
+
+    def test_slack_pressure_scales_up_with_reason(self):
+        pool = _CostPool(n=1)
+        scaler = Autoscaler(
+            pool,
+            _CostQueue(depth=1, slack={"interactive": 0.01, "bulk": 5.0}),
+            AutoscalerConfig(slack_scale_up_s=0.1, max_replicas=2),
+        )
+        scaler.poll_once()
+        (e,) = scaler.events
+        assert e.action == "scale_up" and e.reason == "slack:interactive"
+        assert len(pool.alive_replicas()) == 2
+
+    def test_shed_rate_pressure_scales_up(self):
+        pool = _CostPool(n=1)
+        metrics = ServeMetrics()
+        scaler = Autoscaler(
+            pool, _CostQueue(depth=0),
+            AutoscalerConfig(shed_scale_up_rate=10.0, max_replicas=2),
+            metrics=metrics,
+        )
+        scaler.poll_once()  # first poll only marks the shed counter
+        assert scaler.events == []
+        for _ in range(100):
+            metrics.record_shed()
+        # rewind the mark instead of dwelling: 100 sheds over 1s >> 10/s
+        count, t = scaler._shed_mark
+        scaler._shed_mark = (count, t - 1.0)
+        scaler.poll_once()
+        (e,) = scaler.events
+        assert e.action == "scale_up" and e.reason == "shed"
+
+    def test_depth_trigger_keeps_reason_and_wins(self):
+        pool = _CostPool(n=1)
+        scaler = Autoscaler(
+            pool,
+            _CostQueue(depth=64, slack={"interactive": 0.001}),
+            AutoscalerConfig(slack_scale_up_s=0.1, max_replicas=2),
+        )
+        scaler.poll_once()
+        (e,) = scaler.events
+        assert e.action == "scale_up" and e.reason == "depth"
+
+    def test_no_pressure_no_action(self):
+        pool = _CostPool(n=1)
+        scaler = Autoscaler(
+            pool, _CostQueue(depth=0, slack={"interactive": 5.0}),
+            AutoscalerConfig(slack_scale_up_s=0.1, shed_scale_up_rate=10.0,
+                             max_replicas=2),
+            metrics=ServeMetrics(),
+        )
+        scaler.poll_once()
+        scaler.poll_once()
+        assert scaler.events == []
+
+
+# -- live Prometheus endpoint --------------------------------------------------
+
+
+def _get(url, timeout=5.0):
+    with urllib.request.urlopen(url, timeout=timeout) as resp:
+        return resp.status, resp.read().decode()
+
+
+class TestMetricsServer:
+    def test_scrape_and_health(self):
+        metrics = ServeMetrics()
+        metrics.record_submitted()
+        metrics.record_completed(0.01)
+        server = MetricsServer(metrics, port=0).start()
+        try:
+            assert server.port != 0  # ephemeral port resolved at bind
+            status, body = _get(server.url + "/metrics")
+            assert status == 200
+            assert "pc2im_serve_submitted_total 1" in body
+            assert "pc2im_serve_completed_total 1" in body
+            status, body = _get(server.url + "/healthz")
+            assert status == 200 and body == "ok\n"
+            with pytest.raises(urllib.error.HTTPError):
+                _get(server.url + "/nope")
+        finally:
+            server.stop()
+        with pytest.raises(OSError):
+            _get(server.url + "/healthz", timeout=1.0)
+
+    def test_runtime_lifecycle_owns_listener(self, cfg, params):
+        rt = ServingRuntime(
+            cfg, params, RuntimeConfig(max_batch=2, prometheus_port=0)
+        )
+        try:
+            rt.start()
+            wait_until(lambda: rt.metrics_server.port != 0, desc="listener bind")
+            rt.submit(np.zeros((256, 3), np.float32)).result(timeout=WAIT_S)
+            _, body = _get(rt.metrics_server.url + "/metrics")
+            assert "pc2im_serve_submitted_total 1" in body
+            url = rt.metrics_server.url
+        finally:
+            rt.stop()
+        with pytest.raises(OSError):
+            _get(url + "/healthz", timeout=1.0)

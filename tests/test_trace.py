@@ -165,12 +165,13 @@ class TestEventRegistry:
     """The event namespace is closed: grep-enforced in both directions."""
 
     _LIT = re.compile(
-        r"""["']((?:request|batch|replica|scale|chaos|cache)\.[a-z_]+)["']"""
+        r"""["']((?:request|batch|replica|scale|chaos|cache|adapt)\.[a-z_]+)["']"""
     )
 
     def _literals(self):
         used = {}
-        for path in sorted(SERVE_DIR.glob("*.py")):
+        # rglob: subpackages (serve/adapt/) emit into the same registry
+        for path in sorted(SERVE_DIR.rglob("*.py")):
             for name in self._LIT.findall(path.read_text()):
                 used.setdefault(name, set()).add(path.name)
         return used
